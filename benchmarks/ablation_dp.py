@@ -1,0 +1,97 @@
+"""Ablation: the paper's layer-wise DP vs two cheaper strategy selectors.
+
+  uniform-best : one strategy for every layer (the best single choice that
+                 fits) — what a tuned-but-not-per-layer system does.
+  greedy       : per-layer fastest-that-fits in layer order (no lookahead).
+  galvatron-DP : the paper's memory-budgeted DP with transition costs.
+
+Quantifies the value of the per-layer DP — the paper's central algorithmic
+claim — on the production mesh.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.configs.registry import get_config
+from repro.core import cost_model as cm
+from repro.core import memory_model as mm
+from repro.core.cluster import TPU_V5E_POD
+from repro.core.decision_tree import candidate_strategies
+from repro.core.profiler_model import profile_model
+from repro.core.search import SearchEngine
+
+ARCHS = ["qwen3-14b", "internvl2-26b", "mamba2-2.7b"]
+
+
+def _setup(arch, ga=1):
+    cfg = get_config(arch)
+    prof = profile_model(cfg, 4096, causal_frac=0.5)
+    cands = [c for c in candidate_strategies(cfg, 256, mesh_constrained_tp=16,
+                                             mesh_data_axis=16)
+             if (256 // c.tp) and (256 // ga) % (256 // c.tp) == 0]
+    env = cm.CostEnv(cluster=TPU_V5E_POD, devices=256, pp=1,
+                     micro_batch=256 // ga, grad_accum=ga)
+    fixed = min((mm.fixed_memory(prof, c, env) for c in cands))
+    budget = TPU_V5E_POD.hbm_bytes / TPU_V5E_POD.mem_overhead - fixed
+    return cfg, prof, cands, env, budget
+
+
+def uniform_best(arch):
+    cfg, prof, cands, env, budget = _setup(arch)
+    best = np.inf
+    for c in cands:
+        t = (sum(cm.layer_step_time(lp, c, env) for lp in prof.layers)
+             + cm.head_time(prof, c, env))            # like-for-like vs DP
+        m = sum(mm.layer_memory(lp, c, env) for lp in prof.layers)
+        if m <= budget and t < best:
+            best = t
+    return best
+
+
+def greedy(arch):
+    cfg, prof, cands, env, budget = _setup(arch)
+    remaining, total = budget, 0.0
+    L = len(prof.layers)
+    for i, lp in enumerate(prof.layers):
+        per_layer_budget = remaining / (L - i)
+        opts = []
+        for c in cands:
+            t = cm.layer_step_time(lp, c, env)
+            m = mm.layer_memory(lp, c, env)
+            opts.append((t, m))
+        feas = [(t, m) for t, m in opts if m <= per_layer_budget]
+        if not feas:
+            feas = [min(opts, key=lambda x: x[1])]
+        t, m = min(feas)
+        total += t
+        remaining -= m
+    total += cm.head_time(prof, cands[0], env)        # like-for-like vs DP
+    return total if remaining >= 0 else np.inf
+
+
+def galvatron(arch):
+    res = SearchEngine(get_config(arch)).search(
+        4096, 256, mesh_shape=(16, 16), mesh_axes=("data", "model"),
+        pp_options=[1], grad_accum_options=[1], arch=arch)
+    return res.plan.predicted_step_time if res.feasible else np.inf
+
+
+def run():
+    rows = []
+    for arch in ARCHS:
+        u, g, d = uniform_best(arch), greedy(arch), galvatron(arch)
+        rows.append({"arch": arch, "uniform": u, "greedy": g, "dp": d,
+                     "dp_vs_uniform": u / d if np.isfinite(u) else np.inf,
+                     "dp_vs_greedy": g / d if np.isfinite(g) else np.inf})
+    return rows
+
+
+def main():
+    print("arch,uniform_s,greedy_s,galvatron_dp_s,dp_speedup_vs_uniform,vs_greedy")
+    for r in run():
+        print(f"{r['arch']},{r['uniform']:.3f},{r['greedy']:.3f},{r['dp']:.3f},"
+              f"{r['dp_vs_uniform']:.3f},{r['dp_vs_greedy']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

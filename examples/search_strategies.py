@@ -1,0 +1,25 @@
+"""Explore how the search engine adapts plans to hardware (the paper's core
+mechanism): same model, four clusters, four different strategies.
+
+    PYTHONPATH=src python examples/search_strategies.py
+"""
+from repro.configs.registry import get_config
+from repro.core.cluster import (A100_NODE8, H100_NODE8, RTX4090_NODE8,
+                                TPU_V5E_POD)
+from repro.core.search import SearchEngine
+
+cfg = get_config("qwen3-14b")
+print(f"model: {cfg.name}  ({cfg.num_layers} layers)")
+print(f"{'cluster':12s} {'step(s)':>8s} {'mem/GB':>7s} {'ga':>3s}  strategies")
+for cluster in (A100_NODE8, H100_NODE8, RTX4090_NODE8, TPU_V5E_POD):
+    res = SearchEngine(cfg, cluster).search(
+        4096, 64 if cluster.chips == 16 else 256,
+        total_devices=cluster.chips, mesh_constrained=False,
+        mesh_shape=(cluster.chips,), mesh_axes=("data",))
+    p = res.plan
+    mix = {}
+    for s in p.layer_strategies:
+        mix[s.short()] = mix.get(s.short(), 0) + 1
+    print(f"{cluster.name:12s} {p.predicted_step_time:8.2f} "
+          f"{p.predicted_memory/1e9:7.1f} {p.grad_accum:3d}  {mix}")
+print("\nEach cluster gets a different plan — that's Galvatron's whole point.")

@@ -1,0 +1,11 @@
+"""Batched serving example (prefill + decode with a sharded-KV-capable
+engine) — CPU-scale; the decode_32k/long_500k dry-run cells prove the same
+code path at pod scale.
+
+    PYTHONPATH=src python examples/serve_batched.py
+"""
+from repro.launch import serve as serve_driver
+
+if __name__ == "__main__":
+    serve_driver.main(["--arch", "qwen2.5-3b", "--batch", "4",
+                       "--prompt-len", "32", "--max-new", "16"])

@@ -1,0 +1,64 @@
+"""Render the §Dry-run and §Roofline markdown tables from results/dryrun/.
+
+    PYTHONPATH=src:. python scripts/render_experiments.py [--section dryrun|roofline]
+"""
+import argparse
+import json
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
+
+RESULTS = pathlib.Path(__file__).resolve().parents[1] / "results" / "dryrun"
+
+
+def baseline_files():
+    for p in sorted(RESULTS.glob("*.json")):
+        stem = p.stem
+        parts = stem.split("__")
+        if len(parts) != 3 or parts[2] not in ("pod16x16", "pod2x16x16"):
+            continue                      # skip hillclimb variants
+        yield p, parts
+
+
+def render_dryrun():
+    print("| arch | shape | mesh | plan (ga) | compile s | args GB/dev | temp GB/dev | XLA flops/dev | coll GB/dev |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for p, (arch, shape, mesh) in baseline_files():
+        d = json.loads(p.read_text())
+        if "skipped" in d:
+            print(f"| {arch} | {shape} | {mesh} | — SKIP: sub-quadratic-only cell | | | | | |")
+            continue
+        if "error" in d:
+            print(f"| {arch} | {shape} | {mesh} | ERROR {d['error'][:40]} | | | | | |")
+            continue
+        ma = d["memory_analysis"]
+        plan = d["plan"]
+        print(f"| {arch} | {shape} | {mesh} | {plan['default']} (ga{plan['grad_accum']}) "
+              f"| {d['compile_seconds']:.0f} | {ma['argument_size_in_bytes']/1e9:.2f} "
+              f"| {ma['temp_size_in_bytes']/1e9:.1f} "
+              f"| {d['xla_cost_analysis']['flops_per_device_scanned']:.2e} "
+              f"| {d['collectives']['collective_bytes']/1e9:.1f} |")
+
+
+def render_roofline():
+    from benchmarks.roofline import load_all
+
+    rows = load_all()
+    rows = [r for r in rows if r["mesh"] in ("pod16x16", "pod2x16x16")]
+    print("| arch | shape | mesh | plan | compute s | memory s | collective s | dominant | useful/total FLOPs | XLA/analytic |")
+    print("|---|---|---|---|---|---|---|---|---|---|")
+    for r in rows:
+        print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['plan']} "
+              f"| {r['t_compute_s']:.3g} | {r['t_memory_s']:.3g} | {r['t_collective_s']:.3g} "
+              f"| **{r['dominant']}** | {r['useful_flops_frac']:.2f} | {r['xla_unrolled_frac']:.2f} |")
+    doms = [r["dominant"] for r in rows]
+    print(f"\n{len(rows)} runnable cells: {doms.count('compute')} compute-bound, "
+          f"{doms.count('memory')} memory-bound, {doms.count('collective')} collective-bound.")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--section", choices=["dryrun", "roofline"], default="roofline")
+    a = ap.parse_args()
+    (render_dryrun if a.section == "dryrun" else render_roofline)()

@@ -1,0 +1,40 @@
+"""Dev script: one train-forward + prefill + decode per reduced arch on CPU."""
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import ARCH_IDS, get_config
+from repro.models import build_model
+
+ok = True
+for arch in ARCH_IDS:
+    cfg = get_config(arch).reduced()
+    model = build_model(cfg)
+    key = jax.random.PRNGKey(0)
+    params = model.init(key)
+    B, S = 2, 32
+    tokens = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    kwargs = {}
+    if cfg.family == "vlm":
+        kwargs["vis_embeds"] = jnp.zeros((B, cfg.vis_tokens, cfg.d_model), jnp.bfloat16)
+    if cfg.family == "audio":
+        kwargs["frames"] = jnp.zeros((B, cfg.enc_frames, cfg.d_model), jnp.bfloat16)
+    try:
+        logits, extra = jax.jit(lambda p, t: model.forward_train(p, t, **kwargs))(params, tokens)
+        exp_s = S + (cfg.vis_tokens if cfg.family == "vlm" else 0)
+        assert logits.shape == (B, exp_s, cfg.vocab_size), logits.shape
+        assert not np.any(np.isnan(logits)), "NaN in train logits"
+        # prefill + decode
+        lg, cache = jax.jit(lambda p, t: model.forward_prefill(p, t, max_len=S + 4, **{k: v for k, v in kwargs.items() if k == "frames"}))(params, tokens)
+        step = jax.jit(lambda p, t, c, i: model.forward_decode(p, t, c, i))
+        lg2, cache = step(params, tokens[:, :1], cache, jnp.int32(S))
+        assert lg2.shape == (B, 1, cfg.vocab_size), lg2.shape
+        assert not np.any(np.isnan(lg2)), "NaN in decode logits"
+        print(f"[ok] {arch:24s} train{logits.shape} decode{lg2.shape}")
+    except Exception as e:  # noqa: BLE001
+        ok = False
+        print(f"[FAIL] {arch}: {type(e).__name__}: {e}")
+
+sys.exit(0 if ok else 1)

@@ -1,0 +1,17 @@
+"""Galvatron core: profiler + search engine + strategy/plan contracts.
+
+Public API (paper Fig. 2):
+    get_hybrid_parallel_configs  -> SearchEngine.search(...)
+    construct_hybrid_parallel_model -> repro.runtime.train
+"""
+from repro.core.cluster import ClusterSpec, TPU_V5E_POD, TPU_V5E_2POD, CLUSTERS
+from repro.core.search import SearchEngine, SearchResult, serving_plan
+from repro.core.strategy import ExecutionPlan, LayerStrategy, uniform_plan
+
+
+def get_hybrid_parallel_configs(cfg, seq_len, global_batch, **kw):
+    """The paper's user-facing entry point (Fig. 2 line 9)."""
+    from repro.core.cluster import TPU_V5E_POD as _default
+
+    engine = SearchEngine(cfg, kw.pop("cluster", _default))
+    return engine.search(seq_len, global_batch, **kw).plan

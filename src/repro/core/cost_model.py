@@ -1,0 +1,159 @@
+"""Time cost model — per-layer, per-strategy execution time.
+
+Follows the paper's decomposition: compute (profiled FLOPs / attainable
+throughput, with ceil() padding waste for non-divisible TP shards), TP/SP
+collectives (2 activation all-reduces per block per direction, repeated by
+recomputation), ZeRO/DP gradient traffic (amortized once per optimizer step,
+partially overlapped with backward compute), MoE all-to-all, and pipeline
+p2p + bubble.  All formulas route through :mod:`repro.core.profiler_hw` so a
+different cluster (the Fig.-3 GPU presets) changes the answers — that is the
+mechanism by which Galvatron picks different strategies per cluster.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+from repro.core import profiler_hw as hw
+from repro.core.cluster import ClusterSpec
+from repro.core.profiler_model import LayerProfile, ModelProfile
+from repro.core.strategy import LayerStrategy
+
+BWD_FLOPS_FACTOR = 2.0          # backward ≈ 2× forward
+DP_OVERLAP = 0.7                # fraction of DP grad comm hidden under bwd
+GRAD_BYTES = 4.0                # fp32 gradient reduction
+
+
+@dataclasses.dataclass(frozen=True)
+class CostEnv:
+    cluster: ClusterSpec
+    devices: int                  # devices per pipeline stage (dp * tp)
+    pp: int
+    micro_batch: int              # samples per microbatch (global)
+    grad_accum: int               # microbatches per step
+    opt_bytes: float = 8.0        # Adam m+v bytes/param (4.0 = bf16 states)
+
+    def dp(self, strat: LayerStrategy) -> int:
+        return max(self.devices // max(strat.tp, 1), 1)
+
+    def local(self, strat: LayerStrategy) -> float:
+        """Samples per device per microbatch (dp-sharded batch)."""
+        return max(self.micro_batch / self.dp(strat), 1e-9)
+
+
+def _ceil_frac(dim: int, shards: int) -> float:
+    """ceil-padding waste factor for sharding `dim` over `shards`."""
+    if shards <= 1 or dim <= 0:
+        return 1.0
+    return math.ceil(dim / shards) * shards / dim
+
+
+def compute_time(profile: LayerProfile, strat: LayerStrategy, env: CostEnv) -> float:
+    eff = env.cluster.peak_flops * env.cluster.flops_efficiency
+    fwd = 0.0
+    for part in profile.flop_parts:
+        tp = strat.tp
+        waste = _ceil_frac(part.shard_dim, tp) if part.shard_dim else 1.0
+        fwd += part.flops * waste / tp if part.shard_dim else part.flops
+    fwd *= env.local(strat) / eff
+    total = fwd * (1.0 + BWD_FLOPS_FACTOR)
+    if strat.remat == "full":
+        total += fwd
+    elif strat.remat == "selective":
+        total += (profile.flops_quadratic / strat.tp) * env.local(strat) / eff
+    return total
+
+
+def tp_comm_time(profile: LayerProfile, strat: LayerStrategy, env: CostEnv) -> float:
+    """Activation all-reduces over the TP group (AG+RS under SP — same volume)."""
+    if strat.tp <= 1:
+        return 0.0
+    nbytes = profile.seq_len * env.local(strat) * _d_model(profile) * 2.0
+    n_coll = profile.tp_collectives * 2          # fwd + bwd
+    if strat.remat == "full":
+        n_coll += profile.tp_collectives         # recompute repeats fwd collectives
+    return n_coll * hw.allreduce_time(nbytes, strat.tp, env.cluster)
+
+
+def _d_model(profile: LayerProfile) -> float:
+    # boundary acts are 4*S*d*2 bytes -> recover d
+    return profile.act_boundary / (4.0 * 2.0 * profile.seq_len)
+
+
+def dp_comm_time(profile: LayerProfile, strat: LayerStrategy, env: CostEnv) -> float:
+    """Gradient/param traffic over the DP group, once per optimizer step."""
+    dp = env.dp(strat)
+    if dp <= 1:
+        return 0.0
+    tp_share = profile.param_count_tp / max(strat.tp, 1) + \
+        (profile.param_count - profile.param_count_tp - profile.expert_param_count)
+    ep_share = profile.expert_param_count / max(strat.ep * strat.tp, 1)
+    p_local = tp_share + ep_share
+    grad_bytes = p_local * GRAD_BYTES
+    t = 0.0
+    if strat.zero <= 1:
+        # all-reduce grads (zero-1's RS+AG has identical ring volume)
+        t += hw.allreduce_time(grad_bytes, dp, env.cluster)
+    elif strat.zero == 2:
+        t += hw.reducescatter_time(grad_bytes, dp, env.cluster)
+        t += hw.allgather_time(p_local * 2.0, dp, env.cluster)   # updated bf16 params
+    else:
+        # zero-3: params are SHARDED, so every microbatch all-gathers them in
+        # fwd and bwd (plus once more under full recompute) — ×grad_accum,
+        # unlike the once-per-step gradient reduction.  (Charging this per
+        # step instead made the search pick zero3+ga16 for grok and the
+        # dry-run HLO showed 220 s of all-gathers vs the predicted 20 s.)
+        n_ag = 2.0 + (1.0 if strat.remat == "full" else 0.0)
+        t += env.grad_accum * n_ag * hw.allgather_time(p_local * 2.0, dp, env.cluster)
+        t += hw.reducescatter_time(grad_bytes, dp, env.cluster)
+    return t
+
+
+def ep_comm_time(profile: LayerProfile, strat: LayerStrategy, env: CostEnv) -> float:
+    if strat.ep <= 1 or profile.ep_a2a_bytes == 0:
+        return 0.0
+    nbytes = profile.ep_a2a_bytes * env.local(strat)
+    return 2.0 * hw.alltoall_time(nbytes, strat.ep, env.cluster)     # fwd + bwd
+
+
+def layer_step_time(profile: LayerProfile, strat: LayerStrategy, env: CostEnv) -> float:
+    """Per-optimizer-step time contribution of one layer under one strategy:
+    M microbatches of compute+TP+EP, plus DP traffic with overlap credit."""
+    per_micro = (compute_time(profile, strat, env)
+                 + tp_comm_time(profile, strat, env)
+                 + ep_comm_time(profile, strat, env))
+    compute_total = env.grad_accum * per_micro
+    dp = dp_comm_time(profile, strat, env)
+    bwd_span = compute_total * BWD_FLOPS_FACTOR / (1.0 + BWD_FLOPS_FACTOR)
+    dp_exposed = max(dp - DP_OVERLAP * bwd_span, dp * 0.05)
+    return compute_total + dp_exposed
+
+
+def transition_time(prev: LayerStrategy, nxt: LayerStrategy,
+                    profile: LayerProfile, env: CostEnv) -> float:
+    """Activation resharding between differently-laid-out adjacent layers."""
+    if (prev.tp, prev.sp) == (nxt.tp, nxt.sp):
+        return 0.0
+    nbytes = profile.seq_len * env.local(nxt) * _d_model(profile) * 2.0
+    n = max(prev.tp, nxt.tp, 2)
+    return env.grad_accum * 2.0 * hw.allgather_time(nbytes, n, env.cluster)
+
+
+def pipeline_extras(model_profile: ModelProfile, env: CostEnv,
+                    per_micro_stage_time: float) -> float:
+    """GPipe bubble + inter-stage p2p per step."""
+    if env.pp <= 1:
+        return 0.0
+    bubble = (env.pp - 1) * per_micro_stage_time
+    act_bytes = (model_profile.d_model * model_profile.seq_len
+                 * env.micro_batch / env.devices * 4.0)     # fp32 boundary (runtime)
+    p2p = 2.0 * env.grad_accum * (env.pp - 1) * hw.p2p_time(act_bytes, env.cluster)
+    return bubble + p2p
+
+
+def head_time(model_profile: ModelProfile, strat: LayerStrategy, env: CostEnv) -> float:
+    """Embed + lm-head + loss, per step."""
+    eff = env.cluster.peak_flops * env.cluster.flops_efficiency
+    shards = max(strat.tp, 1)
+    per_micro = (model_profile.head_flops * env.local(strat) / shards / eff) * 3.0
+    return env.grad_accum * per_micro

@@ -1,0 +1,110 @@
+"""Layer-wise dynamic programming under a per-device memory budget
+(the paper's core algorithm, vectorized with numpy).
+
+State: (layer, quantized-memory-used, strategy-of-previous-layer); the third
+component carries the activation-resharding transition cost between adjacent
+layers with different layouts.  Complexity O(L · M · C²) with M memory
+buckets and C candidates — sub-second for 80-layer models, matching the
+paper's "within minutes" claim with huge margin.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class DPResult:
+    feasible: bool
+    total_time: float
+    choices: list             # per-layer candidate index
+    mem_used: float           # bytes (quantized, upper bound)
+
+
+def optimize(
+    times: np.ndarray,        # (L, C) per-layer per-candidate step time (s)
+    mems: np.ndarray,         # (L, C) per-layer per-candidate bytes
+    budget: float,            # per-device bytes available for the layers
+    trans: np.ndarray,        # (C, C) transition cost between adjacent layers
+    n_buckets: int = 1024,
+) -> DPResult:
+    # ceil-quantization overcounts each layer by <1 bucket; with L≈80 layers
+    # 256 buckets forfeited ~30% of the budget (measured: greedy beat the DP
+    # by 5% on qwen3) — 1024 buckets caps the loss at ~8%.
+    L, C = times.shape
+    if L == 0:
+        return DPResult(True, 0.0, [], 0.0)
+    if budget <= 0:
+        return DPResult(False, math.inf, [], 0.0)
+    # total capacity must equal the budget exactly: n_buckets × bucket ==
+    # budget (flooring bucket at 1 byte let toy budgets overshoot by
+    # n_buckets×, admitting infeasible assignments)
+    bucket = budget / n_buckets
+    mem_b = np.ceil(mems / bucket).astype(np.int64)        # (L, C) buckets, >= 0
+    M = n_buckets
+
+    INF = np.float64(np.inf)
+    # dp[m, c]: min time over first (l+1) layers using exactly m buckets,
+    # layer l assigned candidate c
+    dp = np.full((M + 1, C), INF)
+    back = np.zeros((L, M + 1, C), np.int16)
+
+    for c in range(C):
+        mb = mem_b[0, c]
+        if mb <= M:
+            dp[mb, c] = times[0, c]
+
+    for l in range(1, L):
+        tot = dp[:, :, None] + trans[None, :, :]           # (M+1, P, C)
+        prev_idx = np.argmin(tot, axis=1)                   # (M+1, C)
+        cand = np.take_along_axis(tot, prev_idx[:, None, :], axis=1)[:, 0, :]
+        new_dp = np.full_like(dp, INF)
+        for c in range(C):
+            mb = int(mem_b[l, c])
+            if mb > M:
+                continue
+            if mb == 0:
+                new_dp[:, c] = cand[:, c] + times[l, c]
+                back[l, :, c] = prev_idx[:, c].astype(np.int16)
+            else:
+                new_dp[mb:, c] = cand[:-mb, c] + times[l, c]
+                back[l, mb:, c] = prev_idx[:-mb, c].astype(np.int16)
+        dp = new_dp
+
+    flat = int(np.argmin(dp))
+    m_star, c_star = divmod(flat, C)
+    if not np.isfinite(dp[m_star, c_star]):
+        return DPResult(False, math.inf, [], 0.0)
+
+    choices = [0] * L
+    m, c = m_star, c_star
+    choices[L - 1] = c
+    for l in range(L - 1, 0, -1):
+        p = int(back[l, m, c])
+        m -= int(mem_b[l, c])
+        c = p
+        choices[l - 1] = c
+    return DPResult(True, float(dp[m_star, c_star]), choices, float(m_star * bucket))
+
+
+def brute_force(times: np.ndarray, mems: np.ndarray, budget: float,
+                trans: np.ndarray) -> DPResult:
+    """Exhaustive reference for tests (use only for tiny L·C)."""
+    import itertools
+
+    L, C = times.shape
+    best_t, best_assign = math.inf, None
+    for assign in itertools.product(range(C), repeat=L):
+        mem = sum(mems[l, c] for l, c in enumerate(assign))
+        if mem > budget:
+            continue
+        t = sum(times[l, c] for l, c in enumerate(assign))
+        t += sum(trans[assign[l - 1], assign[l]] for l in range(1, L))
+        if t < best_t:
+            best_t, best_assign = t, list(assign)
+    if best_assign is None:
+        return DPResult(False, math.inf, [], 0.0)
+    return DPResult(True, best_t, best_assign,
+                    float(sum(mems[l, c] for l, c in enumerate(best_assign))))

@@ -1,0 +1,103 @@
+"""Hardware profiler — collective cost models (alpha-beta) + measured fits.
+
+Analytic path: ring-collective formulas parameterized by the
+:class:`~repro.core.cluster.ClusterSpec` (the paper's profiled bandwidth
+tables, derived here from hardware constants because the container has no
+TPU).  Measured path: times ``psum`` on the available jax devices across
+message sizes and fits (alpha, beta) by least squares — the same procedure
+the paper's profiler runs on a real cluster, demonstrated on CPU in tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from typing import Callable
+
+import numpy as np
+
+from repro.core.cluster import ClusterSpec
+
+
+# ---- ring-collective time models (bytes = full tensor size) ---------------
+
+def allreduce_time(nbytes: float, n: int, cluster: ClusterSpec) -> float:
+    if n <= 1 or nbytes == 0:
+        return 0.0
+    bw, lat = cluster.link_bw(n), cluster.latency(n)
+    return 2.0 * (n - 1) / n * nbytes / bw + 2.0 * (n - 1) * lat
+
+
+def allgather_time(nbytes: float, n: int, cluster: ClusterSpec) -> float:
+    """nbytes = full gathered size."""
+    if n <= 1 or nbytes == 0:
+        return 0.0
+    bw, lat = cluster.link_bw(n), cluster.latency(n)
+    return (n - 1) / n * nbytes / bw + (n - 1) * lat
+
+
+def reducescatter_time(nbytes: float, n: int, cluster: ClusterSpec) -> float:
+    return allgather_time(nbytes, n, cluster)
+
+
+def alltoall_time(nbytes: float, n: int, cluster: ClusterSpec) -> float:
+    if n <= 1 or nbytes == 0:
+        return 0.0
+    bw, lat = cluster.link_bw(n), cluster.latency(n)
+    return (n - 1) / n * nbytes / bw + (n - 1) * lat
+
+
+def p2p_time(nbytes: float, cluster: ClusterSpec, inter: bool = True) -> float:
+    bw = cluster.inter_bw if inter else cluster.intra_bw
+    lat = cluster.inter_latency if inter else cluster.intra_latency
+    return nbytes / bw + lat
+
+
+# ---- measured path ---------------------------------------------------------
+
+@dataclasses.dataclass
+class FittedComm:
+    alpha: float                  # latency per collective (s)
+    beta: float                   # seconds per byte
+    r2: float
+
+    def time(self, nbytes: float) -> float:
+        return self.alpha + self.beta * nbytes
+
+
+def measure_allreduce(sizes_bytes=None, iters: int = 8) -> FittedComm:
+    """Fit alpha-beta for psum across the local jax device set."""
+    import jax
+    import jax.numpy as jnp
+
+    n = jax.device_count()
+    sizes_bytes = sizes_bytes or [1 << k for k in range(12, 22, 2)]
+    mesh = jax.make_mesh((n,), ("x",))
+    xs, ys = [], []
+    for sz in sizes_bytes:
+        elems = max(sz // 4, n)
+        elems = (elems // n) * n
+
+        def f(a):
+            return jax.lax.psum(a, "x")
+
+        g = jax.jit(jax.shard_map(f, mesh=mesh,
+                                  in_specs=jax.sharding.PartitionSpec("x"),
+                                  out_specs=jax.sharding.PartitionSpec()))
+        a = jnp.ones((elems,), jnp.float32)
+        g(a).block_until_ready()
+        ts = []
+        for _ in range(iters):
+            t0 = time.perf_counter()
+            g(a).block_until_ready()
+            ts.append(time.perf_counter() - t0)
+        xs.append(float(elems * 4))
+        ys.append(float(np.median(ts)))
+    A = np.stack([np.ones_like(xs), np.asarray(xs)], axis=1)
+    coef, res, *_ = np.linalg.lstsq(A, np.asarray(ys), rcond=None)
+    pred = A @ coef
+    ss_res = float(np.sum((ys - pred) ** 2))
+    ss_tot = float(np.sum((ys - np.mean(ys)) ** 2)) or 1.0
+    return FittedComm(alpha=max(float(coef[0]), 0.0),
+                      beta=max(float(coef[1]), 1e-15),
+                      r2=1.0 - ss_res / ss_tot)

@@ -1,0 +1,67 @@
+"""Cost-model visualization plugin (paper §2: "Galvatron includes a
+visualization plugin for the cost model, enhancing user accessibility").
+
+Renders an ExecutionPlan as a per-layer strategy map with the cost/memory
+breakdown each layer's choice implies — terminal/markdown friendly.
+"""
+from __future__ import annotations
+
+from repro.configs.registry import ModelConfig
+from repro.core import cost_model as cm
+from repro.core import memory_model as mm
+from repro.core.cluster import ClusterSpec, TPU_V5E_POD
+from repro.core.profiler_model import profile_model
+from repro.core.strategy import ExecutionPlan
+
+_GLYPH = {"none": "█", "selective": "▓", "full": "░"}
+
+
+def render_plan(
+    cfg: ModelConfig,
+    plan: ExecutionPlan,
+    seq_len: int,
+    global_batch: int,
+    cluster: ClusterSpec = TPU_V5E_POD,
+    width: int = 64,
+) -> str:
+    profile = profile_model(cfg, seq_len, causal_frac=0.5)
+    devices = plan.num_devices // plan.pp
+    env = cm.CostEnv(cluster=cluster, devices=devices, pp=plan.pp,
+                     micro_batch=global_batch // plan.grad_accum,
+                     grad_accum=plan.grad_accum)
+    lines = [
+        f"plan: {plan.arch} × {plan.shape}   mesh {plan.mesh_shape} "
+        f"pp={plan.pp} ga={plan.grad_accum}",
+        f"predicted step {plan.predicted_step_time:.3f}s · "
+        f"memory {plan.predicted_memory/1e9:.1f} GB/device",
+        "",
+        "layer map (█ no-remat ▓ selective ░ full):",
+    ]
+    # strategy band
+    strats = plan.layer_strategies
+    band = "".join(_GLYPH.get(s.remat, "?") for s in strats)
+    lines.append(f"  {band}")
+    # group legend with per-group costs
+    lines.append("")
+    lines.append(f"  {'layers':>10s}  {'strategy':22s} {'t/layer':>9s} {'mem/layer':>10s}")
+    for g in plan.groups():
+        s = g.strategy
+        lp = profile.layers[min(g.start, len(profile.layers) - 1)]
+        t = cm.layer_step_time(lp, s, env)
+        m = mm.layer_memory(lp, s, env)
+        lines.append(f"  {f'{g.start}..{g.stop-1}':>10s}  {s.short():22s} "
+                     f"{t*1e3:8.2f}ms {m/1e6:9.1f}MB")
+    # cost decomposition for the dominant strategy
+    s0 = plan.default_strategy
+    lp0 = profile.layers[0]
+    comp = cm.compute_time(lp0, s0, env)
+    tpc = cm.tp_comm_time(lp0, s0, env)
+    dpc = cm.dp_comm_time(lp0, s0, env)
+    epc = cm.ep_comm_time(lp0, s0, env)
+    lines += [
+        "",
+        f"per-layer cost split (default {s0.short()}):",
+        f"  compute {comp*1e3:8.2f} ms/micro · tp-comm {tpc*1e3:.2f} · "
+        f"dp-comm {dpc*1e3:.2f}/step · ep-comm {epc*1e3:.2f}",
+    ]
+    return "\n".join(lines)

@@ -1,0 +1,116 @@
+"""Blocked flash-attention forward kernel (Pallas, TPU target).
+
+Design for the TPU memory hierarchy (DESIGN.md §7):
+  * grid = (batch·heads, q-blocks, kv-blocks); the kv dim is the innermost,
+    sequential ("arbitrary") dimension so the online-softmax state lives in
+    VMEM scratch across kv steps.
+  * BlockSpecs tile q/k/v into (block, head_dim) VMEM windows — block=128
+    keeps the s = q·kᵀ matmul MXU-shaped (128×128 systolic array) and the
+    working set (3·128·hd·2B + scratch) well under VMEM.
+  * accumulators (o, m, l) are fp32 scratch; inputs stay bf16 on the MXU.
+  * causal masking is positional (iota over the block offsets); fully-masked
+    blocks still run — a future hillclimb can skip them by shrinking the kv
+    grid per q block (§Perf notes).
+
+Validated with ``interpret=True`` on CPU against ``ref.attention_reference``.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_KV = 128
+
+
+def _flash_fwd_kernel(q_ref, k_ref, v_ref,            # VMEM inputs
+                      o_ref,                           # VMEM output
+                      acc_ref, m_ref, l_ref,           # VMEM scratch (fp32)
+                      *, causal: bool, block_q: int, block_kv: int,
+                      num_kv_blocks: int, scale: float):
+    qi = pl.program_id(1)
+    kj = pl.program_id(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0].astype(jnp.float32)                   # (bq, hd)
+    k = k_ref[0].astype(jnp.float32)                   # (bk, hd)
+    v = v_ref[0].astype(jnp.float32)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+
+    if causal:
+        q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_kv), 0)
+        k_pos = kj * block_kv + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_kv), 1)
+        s = jnp.where(k_pos <= q_pos, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    l_prev = l_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_new = l_prev * corr + jnp.sum(p, axis=-1)
+    acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    @pl.when(kj == num_kv_blocks - 1)
+    def _finalize():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_fwd(q, k, v, *, causal: bool = True,
+                        block_q: int = DEFAULT_BLOCK_Q,
+                        block_kv: int = DEFAULT_BLOCK_KV,
+                        interpret: bool = False):
+    """q/k/v: (B, S, H, hd) with equal head counts -> (B, S, H, hd)."""
+    B, Sq, H, hd = q.shape
+    Sk = k.shape[1]
+    block_q = min(block_q, Sq)
+    block_kv = min(block_kv, Sk)
+    assert Sq % block_q == 0 and Sk % block_kv == 0, (Sq, Sk, block_q, block_kv)
+    nq, nk = Sq // block_q, Sk // block_kv
+
+    # (B, S, H, hd) -> (B*H, S, hd): one grid row per (batch, head)
+    qt = q.transpose(0, 2, 1, 3).reshape(B * H, Sq, hd)
+    kt = k.transpose(0, 2, 1, 3).reshape(B * H, Sk, hd)
+    vt = v.transpose(0, 2, 1, 3).reshape(B * H, Sk, hd)
+
+    kernel = functools.partial(
+        _flash_fwd_kernel, causal=causal, block_q=block_q, block_kv=block_kv,
+        num_kv_blocks=nk, scale=hd ** -0.5)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(B * H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, block_q, hd), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_kv, hd), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, block_kv, hd), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, hd), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, Sq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, hd), jnp.float32),    # acc
+            pltpu.VMEM((block_q,), jnp.float32),       # m (running max)
+            pltpu.VMEM((block_q,), jnp.float32),       # l (running denom)
+        ],
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ) if not interpret else None,
+    )(qt, kt, vt)
+    return out.reshape(B, H, Sq, hd).transpose(0, 2, 1, 3)

@@ -1,0 +1,43 @@
+"""Jitted wrapper for flash attention with custom VJP.
+
+Forward = Pallas kernel (interpret mode on CPU).  Backward = XLA-compiled
+recompute from the chunked pure-jnp formulation — the standard trick of
+pairing a hand-written forward kernel with an autodiff backward through a
+memory-equivalent reference (the saved residuals are just q/k/v).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+def _use_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def flash_attention(q, k, v, causal: bool = True):
+    from repro.kernels.flash_attention.kernel import flash_attention_fwd
+
+    return flash_attention_fwd(q, k, v, causal=causal, interpret=_use_interpret())
+
+
+def _fwd(q, k, v, causal):
+    out = flash_attention(q, k, v, causal)
+    return out, (q, k, v)
+
+
+def _bwd(causal, res, g):
+    q, k, v = res
+    from repro.models.attention import chunked_attention
+
+    def f(q_, k_, v_):
+        return chunked_attention(q_, k_, v_, causal=causal)
+
+    _, vjp = jax.vjp(f, q, k, v)
+    return vjp(g)
+
+
+flash_attention.defvjp(_fwd, _bwd)

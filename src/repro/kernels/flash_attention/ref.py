@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the flash-attention kernel.
+
+Heads are pre-expanded (q/k/v all share the head count) — GQA expansion
+happens in the model layer.  fp32 softmax, dense materialized scores: this
+is the O(S²)-memory ground truth the blocked kernel must match.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = -0.7 * float(np.finfo(np.float32).max)
+
+
+def attention_reference(q, k, v, *, causal: bool = True):
+    """q/k/v: (B, S, H, hd) -> (B, S, H, hd)."""
+    B, Sq, H, hd = q.shape
+    Sk = k.shape[1]
+    scale = hd ** -0.5
+    logits = jnp.einsum("bqhd,bshd->bhqs", q, k).astype(jnp.float32) * scale
+    if causal:
+        mask = jnp.arange(Sk)[None, :] <= jnp.arange(Sq)[:, None]
+        logits = jnp.where(mask[None, None], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqs,bshd->bqhd", probs.astype(v.dtype), v)
+    return out.astype(q.dtype)

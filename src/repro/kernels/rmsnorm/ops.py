@@ -1,0 +1,16 @@
+"""Jitted RMSNorm entry point (kernel on TPU, oracle elsewhere)."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.rmsnorm import ref as _ref
+
+
+def rmsnorm(x, scale, eps: float = 1e-5, *, impl: str = "auto"):
+    if impl == "ref" or (impl == "auto" and jax.default_backend() != "tpu"):
+        return _ref.rmsnorm_reference(x, scale, eps)
+    from repro.kernels.rmsnorm.kernel import rmsnorm_pallas
+
+    return rmsnorm_pallas(x, scale, eps,
+                          interpret=(impl == "pallas_interpret"
+                                     or jax.default_backend() != "tpu"))

@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for the fused RMSNorm kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rmsnorm_reference(x, scale, eps: float = 1e-5):
+    """x: (..., D); scale: (D,)."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * (var + eps) ** -0.5 * scale.astype(jnp.float32)).astype(x.dtype)

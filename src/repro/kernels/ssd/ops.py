@@ -1,0 +1,36 @@
+"""Jitted entry point for the SSD scan: dispatches ref / chunked / pallas.
+
+``impl``:
+  - ``"ref"``      : chunked pure-jnp oracle (CPU tests, GSPMD dry-run)
+  - ``"naive"``    : step-by-step scan (ground truth for tiny shapes)
+  - ``"pallas"``   : Pallas TPU kernel (interpret=True on CPU)
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.ssd import ref as _ref
+
+
+def ssd(x, dt, A, B, C, *, chunk: int = 64, impl: str = "ref", initial_state=None):
+    """x: (B,S,H,P); dt: (B,S,H); A: (H,); B/C: (B,S,G,N) -> (y, final_state)."""
+    if impl == "naive":
+        return _ref.ssd_naive(x, dt, A, B, C, initial_state=initial_state)
+    if impl == "ref":
+        S = x.shape[1]
+        c = chunk
+        while S % c:
+            c //= 2
+        return _ref.ssd_chunked(x, dt, A, B, C, chunk=max(c, 1), initial_state=initial_state)
+    if impl in ("pallas", "pallas_interpret"):
+        from repro.kernels.ssd.kernel import ssd_pallas
+
+        return ssd_pallas(x, dt, A, B, C, chunk=chunk,
+                          interpret=(impl == "pallas_interpret"),
+                          initial_state=initial_state)
+    raise ValueError(f"unknown ssd impl {impl!r}")
+
+
+def ssd_step(state, x_t, dt_t, A, B_t, C_t):
+    """Single recurrent decode step (delegates to the oracle's step)."""
+    return _ref.ssd_step(state, x_t, dt_t, A, B_t, C_t)

@@ -1,0 +1,281 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture × shape × mesh) cell.
+
+For each cell this driver:
+  1. obtains an ExecutionPlan — SearchEngine (mesh-constrained) for train
+     cells, the serving heuristic for prefill/decode cells;
+  2. lowers and COMPILES the step function against ShapeDtypeStruct inputs
+     with full in_shardings on the production mesh (the required proof that
+     the distribution config is coherent);
+  3. records ``compiled.memory_analysis()`` / ``compiled.cost_analysis()``,
+     and collective bytes parsed from the partitioned HLO with while-loop
+     trip-count correction (XLA counts scan bodies once — see hlo_stats);
+  4. additionally lowers an UNROLLED ga=1 variant (never compiled) whose
+     ``cost_analysis`` gives exact global FLOPs/bytes for the roofline.
+
+Results land in ``results/dryrun/<arch>__<shape>__<mesh>.json``; the roofline
+benchmark (benchmarks/roofline.py) consumes them.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-14b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multipod] [--skip-unrolled]
+"""
+import argparse
+import dataclasses
+import json
+import pathlib
+import time
+import traceback
+
+import jax
+import numpy as np
+
+from repro.configs.registry import ARCH_IDS, get_config
+from repro.configs.shapes import SHAPES, supports_shape
+from repro.core.search import SearchEngine, serving_plan
+from repro.launch.hlo_stats import collective_stats
+from repro.launch.mesh import make_production_mesh
+from repro.models import build_model
+from repro.runtime.data import input_specs
+from repro.runtime.serve import ServingEngine
+from repro.runtime.train import construct_hybrid_parallel_model
+
+RESULTS_DIR = pathlib.Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+
+def _mesh_tag(multi_pod: bool) -> str:
+    return "pod2x16x16" if multi_pod else "pod16x16"
+
+
+def _plan_for(cfg, spec, mesh_shape, mesh_axes, arch, shape_id):
+    if spec.kind == "train":
+        eng = SearchEngine(cfg)
+        res = eng.search(spec.seq_len, spec.global_batch,
+                         mesh_shape=mesh_shape, mesh_axes=mesh_axes,
+                         pp_options=[1],  # GSPMD path; PP variant is separate
+                         arch=arch, shape_name=shape_id)
+        return res.plan, {"search_seconds": res.search_seconds,
+                          "search_feasible": res.feasible}
+    plan = serving_plan(cfg, seq_len=spec.seq_len, batch=spec.global_batch,
+                        mesh_shape=mesh_shape, mesh_axes=mesh_axes,
+                        arch=arch, shape_name=shape_id)
+    return plan, {"search_seconds": 0.0, "search_feasible": True}
+
+
+def _memory_dict(ma) -> dict:
+    return {k: getattr(ma, k) for k in (
+        "argument_size_in_bytes", "output_size_in_bytes", "alias_size_in_bytes",
+        "temp_size_in_bytes", "generated_code_size_in_bytes")}
+
+
+def _summarize_plan(plan) -> dict:
+    ss: dict = {}
+    for s in plan.layer_strategies:
+        ss[s.short()] = ss.get(s.short(), 0) + 1
+    return {"pp": plan.pp, "grad_accum": plan.grad_accum,
+            "strategies": ss, "default": plan.default_strategy.short(),
+            "predicted_step_time": plan.predicted_step_time,
+            "predicted_memory": plan.predicted_memory,
+            "notes": plan.notes}
+
+
+def run_cell(arch: str, shape_id: str, *, multi_pod: bool = False,
+             skip_unrolled: bool = False, verbose: bool = True,
+             custom_mesh: tuple | None = None,
+             force_strategy: str | None = None,
+             force_ga: int | None = None) -> dict:
+    cfg = get_config(arch)
+    spec = SHAPES[shape_id]
+    if custom_mesh is not None:                      # §Perf: alternative meshes
+        import jax as _jax
+
+        mesh = _jax.make_mesh(tuple(custom_mesh), ("data", "model"))
+        mesh_tag = "x".join(map(str, custom_mesh))
+    else:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        mesh_tag = _mesh_tag(multi_pod)
+    mesh_axes = tuple(mesh.axis_names)
+    mesh_shape = tuple(mesh.shape[a] for a in mesh_axes)
+    out: dict = {"arch": arch, "shape": shape_id, "mesh": mesh_tag,
+                 "mesh_shape": mesh_shape, "devices": int(np.prod(mesh_shape)),
+                 "kind": spec.kind, "seq_len": spec.seq_len,
+                 "global_batch": spec.global_batch}
+
+    ok, why = supports_shape(cfg, spec)
+    if not ok:
+        out["skipped"] = why
+        if verbose:
+            print(f"[skip] {arch} × {shape_id}: {why}")
+        return out
+
+    plan, search_meta = _plan_for(cfg, spec, mesh_shape, mesh_axes, arch, shape_id)
+    if force_strategy is not None:                   # §Perf: pinned variants
+        from repro.core.strategy import LayerStrategy
+
+        parts = force_strategy.split("-")
+        kw: dict = {}
+        for tkn in parts:
+            if tkn.startswith("tp"):
+                kw["tp"] = int(tkn[2:])
+            elif tkn == "sp":
+                kw["sp"] = True
+            elif tkn.startswith("z"):
+                kw["zero"] = int(tkn[1:])
+            elif tkn.startswith("ep"):
+                kw["ep"] = int(tkn[2:])
+            elif tkn in ("none", "selective", "full"):
+                kw["remat"] = tkn
+        strat = LayerStrategy(**kw)
+        plan = dataclasses.replace(
+            plan, layer_strategies=[strat] * len(plan.layer_strategies),
+            default_strategy=strat,
+            notes=plan.notes + f" | forced {force_strategy}")
+    if force_ga is not None:
+        plan = dataclasses.replace(plan, grad_accum=force_ga,
+                                   notes=plan.notes + f" | forced ga{force_ga}")
+    out.update(search_meta)
+    out["plan"] = _summarize_plan(plan)
+    model = build_model(cfg)
+
+    # ------------------------------------------------------ build + lower
+    t0 = time.perf_counter()
+    if spec.kind == "train":
+        opt_cfg = None
+        if "bf16-adam" in plan.notes:
+            import jax.numpy as jnp
+            from repro.runtime.optimizer import AdamWConfig
+
+            opt_cfg = AdamWConfig(m_dtype=jnp.bfloat16, v_dtype=jnp.bfloat16)
+        hp = construct_hybrid_parallel_model(model, plan, mesh, opt_cfg=opt_cfg)
+        args = (hp.abstract_params(), hp.abstract_opt_state(),
+                input_specs(cfg, spec, model))
+        lowered = hp.jit_train_step(donate=True).lower(*args)
+    else:
+        engine = ServingEngine(model, plan, mesh,
+                               batch=spec.global_batch, max_len=spec.seq_len)
+        params_abs = engine.abstract_params()      # bf16 at inference
+        specs = input_specs(cfg, spec, model)
+        if spec.kind == "prefill":
+            fn = engine.jit_prefill_step()
+            extras = {k: v for k, v in specs.items() if k != "tokens"}
+            lowered = fn.lower(params_abs, specs["tokens"], extras)
+        else:
+            fn = engine.jit_decode_step(donate=True)
+            lowered = fn.lower(params_abs, specs["tokens"], specs["cache"],
+                               specs["cache_index"], specs["kv_len"])
+    out["lower_seconds"] = time.perf_counter() - t0
+
+    # ------------------------------------------------------ compile
+    t0 = time.perf_counter()
+    compiled = lowered.compile()
+    out["compile_seconds"] = time.perf_counter() - t0
+
+    ma = compiled.memory_analysis()
+    print(ma)                                # the required proof-of-fit output
+    out["memory_analysis"] = _memory_dict(ma)
+    ca = compiled.cost_analysis()
+    print({k: ca.get(k) for k in ("flops", "bytes accessed")})
+    out["xla_cost_analysis"] = {
+        "flops_per_device_scanned": float(ca.get("flops", 0.0)),
+        "bytes_per_device_scanned": float(ca.get("bytes accessed", 0.0)),
+        "note": "XLA counts while(scan) bodies once; see unrolled + collectives",
+    }
+    stats = collective_stats(compiled.as_text())
+    out["collectives"] = stats.merged()
+
+    # ------------------------------------------------------ unrolled lower
+    if not skip_unrolled:
+        t0 = time.perf_counter()
+        try:
+            if spec.kind == "train":
+                plan1 = dataclasses.replace(
+                    plan, grad_accum=1,
+                    layer_strategies=list(plan.layer_strategies))
+                hp_u = construct_hybrid_parallel_model(model, plan1, mesh, unroll=True,
+                                                       opt_cfg=opt_cfg if spec.kind == "train" else None)
+                args_u = (hp_u.abstract_params(), hp_u.abstract_opt_state(),
+                          input_specs(cfg, spec, model))
+                lowered_u = hp_u.jit_train_step(donate=True).lower(*args_u)
+            else:
+                engine_u = ServingEngine(model, plan, mesh, batch=spec.global_batch,
+                                         max_len=spec.seq_len, unroll=True)
+                specs = input_specs(cfg, spec, model)
+                params_abs = engine_u.abstract_params()
+                if spec.kind == "prefill":
+                    extras = {k: v for k, v in specs.items() if k != "tokens"}
+                    lowered_u = engine_u.jit_prefill_step().lower(
+                        params_abs, specs["tokens"], extras)
+                else:
+                    lowered_u = engine_u.jit_decode_step(donate=True).lower(
+                        params_abs, specs["tokens"], specs["cache"],
+                        specs["cache_index"], specs["kv_len"])
+            cu = lowered_u.cost_analysis()
+            out["unrolled"] = {
+                "flops_global": float(cu.get("flops", 0.0)),
+                "bytes_global_unoptimized": float(cu.get("bytes accessed", 0.0)),
+                "lower_seconds": time.perf_counter() - t0,
+                "note": "pre-SPMD global program, exact trip counts; bytes are "
+                        "pre-fusion (upper bound)",
+            }
+        except Exception as e:  # noqa: BLE001 — record, don't fail the cell
+            out["unrolled"] = {"error": f"{type(e).__name__}: {e}"}
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=tuple(SHAPES))
+    ap.add_argument("--multipod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--skip-unrolled", action="store_true")
+    ap.add_argument("--out", default=str(RESULTS_DIR))
+    ap.add_argument("--mesh-shape", default=None,
+                    help="custom single-pod mesh 'dp,tp' (hillclimb variants)")
+    ap.add_argument("--force-strategy", default=None,
+                    help="uniform LayerStrategy short string, e.g. tp16-sp-z2")
+    ap.add_argument("--force-ga", type=int, default=None)
+    ap.add_argument("--tag", default="", help="output filename suffix")
+    args = ap.parse_args()
+
+    outdir = pathlib.Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+
+    if args.all:
+        cells = [(a, s) for a in ARCH_IDS for s in SHAPES]
+    else:
+        assert args.arch and args.shape, "--arch and --shape (or --all)"
+        cells = [(args.arch, args.shape)]
+    meshes = [False, True] if (args.both_meshes or (args.all and not args.multipod)) \
+        else [args.multipod]
+
+    custom = tuple(int(x) for x in args.mesh_shape.split(",")) if args.mesh_shape else None
+    failures = 0
+    for arch, shape_id in cells:
+        for mp in meshes:
+            mtag = "x".join(map(str, custom)) if custom else _mesh_tag(mp)
+            tag = f"{arch}__{shape_id}__{mtag}" + (f"__{args.tag}" if args.tag else "")
+            path = outdir / f"{tag}.json"
+            print(f"=== {tag} ===", flush=True)
+            try:
+                res = run_cell(arch, shape_id, multi_pod=mp,
+                               skip_unrolled=args.skip_unrolled,
+                               custom_mesh=custom,
+                               force_strategy=args.force_strategy,
+                               force_ga=args.force_ga)
+            except Exception as e:  # noqa: BLE001
+                failures += 1
+                res = {"arch": arch, "shape": shape_id, "mesh": _mesh_tag(mp),
+                       "error": f"{type(e).__name__}: {e}",
+                       "traceback": traceback.format_exc()}
+                print(f"[FAIL] {tag}: {e}")
+            path.write_text(json.dumps(res, indent=2, default=str))
+    print(f"done; {failures} failures")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,24 @@
+"""Production mesh builders.
+
+``make_production_mesh`` is a FUNCTION (importing this module never touches
+jax device state): single-pod = 256 chips as (data=16, model=16); multi-pod
+= 2 pods × 256 chips with the extra leading "pod" axis.  The "pod" axis
+carries either pipeline parallelism (PipelineTrainer) or an extra
+data-parallel/ZeRO dimension (GSPMD path) — see DESIGN.md §2.
+
+``make_mesh`` builds arbitrary (dp, tp) meshes for free-mode searched plans
+and CPU-scale tests.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape, axes):
+    return jax.make_mesh(tuple(shape), tuple(axes))

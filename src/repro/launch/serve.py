@@ -1,0 +1,69 @@
+"""Batched serving driver: prefill + decode loop with request batching.
+
+CPU-scale demo of the serving runtime (the decode_32k / long_500k cells
+exercise the full-scale path via the dry-run).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import ARCH_IDS, get_config
+from repro.core.strategy import ExecutionPlan, LayerStrategy
+from repro.models import build_model
+from repro.runtime.serve import ServingEngine
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, default="qwen2.5-3b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--max-new", type=int, default=16)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch).reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    max_len = args.prompt_len + args.max_new
+    strat = LayerStrategy()
+    plan = ExecutionPlan(arch=cfg.name, shape="serve", mesh_axes=("data",),
+                         mesh_shape=(1,), layer_strategies=[strat] * cfg.num_layers,
+                         default_strategy=strat)
+    eng = ServingEngine(model, plan, batch=args.batch, max_len=max_len)
+    params = eng.cast_params(params)
+
+    prompts = jax.random.randint(jax.random.PRNGKey(1),
+                                 (args.batch, args.prompt_len), 0, cfg.vocab_size)
+    t0 = time.perf_counter()
+    logits, cache = jax.jit(eng.prefill_step)(params, prompts)
+    jax.block_until_ready(logits)
+    t_prefill = time.perf_counter() - t0
+
+    decode = jax.jit(eng.decode_step)
+    tok = jnp.argmax(logits[:, -1, :], axis=-1)[:, None].astype(jnp.int32)
+    out = [tok]
+    kv_len = jnp.full((args.batch,), args.prompt_len, jnp.int32)
+    t0 = time.perf_counter()
+    for i in range(args.max_new - 1):
+        logits, cache = decode(params, tok, cache, jnp.int32(args.prompt_len + i),
+                               kv_len + i + 1)
+        tok = jnp.argmax(logits[:, -1, :], axis=-1)[:, None].astype(jnp.int32)
+        out.append(tok)
+    jax.block_until_ready(tok)
+    t_decode = time.perf_counter() - t0
+
+    gen = np.asarray(jnp.concatenate(out, axis=1))
+    print(f"arch={cfg.name} batch={args.batch}")
+    print(f"prefill: {t_prefill*1000:.1f} ms ({args.batch*args.prompt_len/t_prefill:,.0f} tok/s)")
+    print(f"decode : {t_decode*1000:.1f} ms "
+          f"({args.batch*(args.max_new-1)/t_decode:,.0f} tok/s)")
+    print(f"sample tokens: {gen[0][:10].tolist()}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,131 @@
+"""End-to-end training driver: search -> construct -> train -> checkpoint.
+
+CPU-scale by default (reduced or custom-dim configs); the same driver drives
+a real pod by passing the production mesh.  Implements the paper's Fig. 2
+user workflow plus the scale features: periodic atomic checkpoints, restart
+from the latest step, and an elastic-event simulation that re-searches the
+plan mid-run (--simulate-failure-at).
+
+Examples:
+  PYTHONPATH=src python -m repro.launch.train --arch llama3.2-1b --reduced \
+      --steps 20 --seq 64 --batch 8
+  PYTHONPATH=src python -m repro.launch.train --preset 100m --steps 300 \
+      --seq 256 --batch 16 --ckpt-dir /tmp/ckpt
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import ARCH_IDS, ModelConfig, get_config
+from repro.core.search import SearchEngine
+from repro.core.strategy import ExecutionPlan, LayerStrategy
+from repro.models import build_model
+from repro.runtime import checkpoint as ckpt_lib
+from repro.runtime.data import SyntheticDataset
+from repro.runtime.elastic import ElasticEvent, replan
+from repro.runtime.train import construct_hybrid_parallel_model
+
+PRESET_100M = ModelConfig(
+    name="llama-100m", family="dense", num_layers=12, d_model=640,
+    num_heads=10, num_kv_heads=10, d_ff=2560, vocab_size=32_000,
+    head_dim=64, mlp_type="swiglu", rope_theta=10_000.0)
+
+
+def resolve_cfg(args) -> ModelConfig:
+    if args.preset == "100m":
+        return PRESET_100M
+    cfg = get_config(args.arch)
+    return cfg.reduced() if args.reduced else cfg
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, default="llama3.2-1b")
+    ap.add_argument("--preset", choices=["100m"], default=None)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--grad-accum", type=int, default=0, help="0 = searched")
+    ap.add_argument("--remat", default=None, choices=["none", "selective", "full"])
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--simulate-failure-at", type=int, default=0)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args(argv)
+
+    cfg = resolve_cfg(args)
+    model = build_model(cfg)
+    n_dev = jax.device_count()
+
+    # ---- plan: search the engine even at CPU scale (paper workflow) ------
+    if n_dev == 1:
+        strat = LayerStrategy(remat=args.remat or "none")
+        plan = ExecutionPlan(arch=cfg.name, shape="train", mesh_axes=("data",),
+                             mesh_shape=(1,), grad_accum=max(args.grad_accum, 1),
+                             layer_strategies=[strat] * cfg.num_layers,
+                             default_strategy=strat)
+        mesh = None
+    else:
+        shape = (n_dev // 2, 2) if n_dev % 2 == 0 else (n_dev, 1)
+        res = SearchEngine(cfg).search(args.seq, args.batch, mesh_shape=shape,
+                                       mesh_axes=("data", "model"), pp_options=[1],
+                                       arch=cfg.name)
+        plan = res.plan
+        mesh = jax.make_mesh(shape, ("data", "model"))
+    print(f"plan: {plan.default_strategy.short()} ga={plan.grad_accum} "
+          f"groups={len(plan.groups())}")
+
+    hp = construct_hybrid_parallel_model(model, plan, mesh)
+    params = hp.init_params(jax.random.PRNGKey(0))
+    opt = hp.init_opt_state(params)
+    n_params = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(params))
+    print(f"model: {cfg.name} {n_params/1e6:.1f}M params")
+
+    start_step = 0
+    if args.resume and args.ckpt_dir and ckpt_lib.latest_step(args.ckpt_dir) is not None:
+        restored = ckpt_lib.restore(args.ckpt_dir,
+                                    params_like=hp.ungroup(params), opt_like=opt)
+        params = hp.group(jax.tree.map(jnp.asarray, restored["params"]))
+        opt = jax.tree.map(jnp.asarray, restored["opt"])
+        start_step = restored["step"]
+        print(f"resumed from step {start_step}")
+
+    ds = SyntheticDataset(cfg, seq_len=args.seq, global_batch=args.batch)
+    step_fn = hp.jit_train_step(donate=False)
+
+    t_start = time.perf_counter()
+    tokens_done = 0
+    for step in range(start_step, args.steps):
+        if args.simulate_failure_at and step == args.simulate_failure_at:
+            print("!! simulated node failure: re-searching plan for 75% capacity")
+            event = ElasticEvent(old_devices=256, new_devices=192)
+            new_plan = replan(get_config(args.arch) if not args.preset else cfg,
+                              event, args.seq, args.batch)
+            print(f"   new plan: {new_plan.default_strategy.short()} "
+                  f"ga={new_plan.grad_accum} ({new_plan.notes.split('|')[-1].strip()})")
+        batch = {k: jnp.asarray(v) for k, v in ds.batch(step).items()}
+        params, opt, metrics = step_fn(params, opt, batch)
+        tokens_done += args.batch * args.seq
+        if step % args.log_every == 0 or step == args.steps - 1:
+            dt = time.perf_counter() - t_start
+            print(f"step {step:5d}  loss {float(metrics['loss']):.4f}  "
+                  f"gnorm {float(metrics['grad_norm']):.2f}  "
+                  f"tok/s {tokens_done/dt:,.0f}")
+        if args.ckpt_dir and (step + 1) % args.ckpt_every == 0:
+            path = ckpt_lib.save(args.ckpt_dir, step + 1, hp.ungroup(params), opt, plan)
+            print(f"checkpoint -> {path}")
+    if args.ckpt_dir:
+        ckpt_lib.save(args.ckpt_dir, args.steps, hp.ungroup(params), opt, plan)
+    print("done")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,28 @@
+"""Rotary position embeddings (computed on the fly from integer positions)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rope_angles(positions: jnp.ndarray, head_dim: int, theta: float) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """positions: (..., S) int32 -> cos/sin of shape (..., S, head_dim//2), fp32."""
+    half = head_dim // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray) -> jnp.ndarray:
+    """x: (B, S, H, hd); cos/sin: (B, S, hd//2) or (S, hd//2). Rotate-half convention."""
+    dtype = x.dtype
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    if cos.ndim == x.ndim - 2:  # (S, hd/2) -> broadcast over batch+heads
+        cos = cos[None, :, None, :]
+        sin = sin[None, :, None, :]
+    else:  # (B, S, hd/2) -> broadcast over heads
+        cos = cos[:, :, None, :]
+        sin = sin[:, :, None, :]
+    out1 = x1 * cos - x2 * sin
+    out2 = x2 * cos + x1 * sin
+    return jnp.concatenate([out1, out2], axis=-1).astype(dtype)

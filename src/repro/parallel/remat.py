@@ -1,0 +1,23 @@
+"""Per-layer recomputation policies (the paper's extra parallel dimension).
+
+``none``      — save everything (fastest, most memory)
+``selective`` — save only matmul outputs with no batch dims (flash-attn-style
+                selective checkpointing; recomputes elementwise/softmax)
+``full``      — save nothing at layer boundaries (recompute whole layer)
+"""
+from __future__ import annotations
+
+import jax
+
+_POLICIES = {
+    "selective": jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+    "full": jax.checkpoint_policies.nothing_saveable,
+}
+
+
+def apply_remat(fn, policy: str):
+    if policy == "none":
+        return fn
+    if policy not in _POLICIES:
+        raise ValueError(f"unknown remat policy {policy!r}")
+    return jax.checkpoint(fn, policy=_POLICIES[policy], prevent_cse=False)

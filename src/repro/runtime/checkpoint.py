@@ -1,0 +1,139 @@
+"""Fault-tolerant checkpointing: atomic, step-tagged, reshard-on-load.
+
+Checkpoints store the *canonical* (ungrouped, unstaged) parameter pytree, so
+a restore may regroup for a completely different ExecutionPlan — this is the
+mechanism behind elastic scaling (runtime/elastic.py): after a world-size
+change the SearchEngine emits a new plan and the same checkpoint reshards
+onto the new mesh via ``device_put`` with the new shardings.
+
+Format: one zstd-compressed msgpack file per checkpoint step containing raw
+array bytes keyed by pytree path, plus a JSON sidecar with the plan and
+bookkeeping.  Writes go to a temp name + atomic rename; a MANIFEST names the
+latest complete step, so a host crash mid-write can never corrupt restore.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import shutil
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+import zstandard
+
+from repro.core.strategy import ExecutionPlan
+
+
+def _flatten(tree) -> dict:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        flat[key] = leaf
+    return flat
+
+
+def _path_str(tree) -> list:
+    return sorted(_flatten(tree))
+
+
+def save(
+    directory: str | pathlib.Path,
+    step: int,
+    params: Any,
+    opt_state: Any = None,
+    plan: Optional[ExecutionPlan] = None,
+    *,
+    keep: int = 3,
+    extra_meta: Optional[dict] = None,
+) -> pathlib.Path:
+    directory = pathlib.Path(directory)
+    directory.mkdir(parents=True, exist_ok=True)
+    payload: dict = {}
+    for name, tree in (("params", params), ("opt", opt_state)):
+        if tree is None:
+            continue
+        for key, leaf in _flatten(tree).items():
+            arr = np.asarray(jax.device_get(leaf))
+            payload[f"{name}/{key}"] = {
+                "dtype": str(arr.dtype), "shape": list(arr.shape),
+                "data": arr.tobytes(),
+            }
+    blob = zstandard.ZstdCompressor(level=3).compress(
+        msgpack.packb(payload, use_bin_type=True))
+
+    tmp = directory / f".tmp-step{step:09d}"
+    final = directory / f"step{step:09d}.ckpt"
+    tmp.write_bytes(blob)
+    tmp.rename(final)                       # atomic on POSIX
+
+    meta = {"step": step, "plan": json.loads(plan.to_json()) if plan else None,
+            **(extra_meta or {})}
+    meta_tmp = directory / f".tmp-meta{step:09d}"
+    meta_tmp.write_text(json.dumps(meta, indent=2))
+    meta_tmp.rename(directory / f"step{step:09d}.json")
+
+    manifest_tmp = directory / ".tmp-MANIFEST"
+    manifest_tmp.write_text(json.dumps({"latest_step": step}))
+    manifest_tmp.rename(directory / "MANIFEST")
+
+    _gc(directory, keep)
+    return final
+
+
+def _gc(directory: pathlib.Path, keep: int):
+    ckpts = sorted(directory.glob("step*.ckpt"))
+    for old in ckpts[:-keep]:
+        old.unlink(missing_ok=True)
+        directory.joinpath(old.stem + ".json").unlink(missing_ok=True)
+
+
+def latest_step(directory: str | pathlib.Path) -> Optional[int]:
+    manifest = pathlib.Path(directory) / "MANIFEST"
+    if not manifest.exists():
+        return None
+    return int(json.loads(manifest.read_text())["latest_step"])
+
+
+def restore(
+    directory: str | pathlib.Path,
+    step: Optional[int] = None,
+    *,
+    params_like: Any = None,           # pytree template (abstract ok)
+    opt_like: Any = None,
+    shardings: Any = None,             # optional matching sharding pytree
+) -> dict:
+    """Returns {"step", "params", "opt", "plan"}.  With ``shardings`` given,
+    leaves are device_put directly onto the (possibly new) mesh."""
+    directory = pathlib.Path(directory)
+    step = step if step is not None else latest_step(directory)
+    if step is None:
+        raise FileNotFoundError(f"no checkpoint in {directory}")
+    blob = (directory / f"step{step:09d}.ckpt").read_bytes()
+    payload = msgpack.unpackb(zstandard.ZstdDecompressor().decompress(blob),
+                              raw=False)
+    meta = json.loads((directory / f"step{step:09d}.json").read_text())
+
+    def rebuild(prefix: str, like):
+        paths, treedef = jax.tree_util.tree_flatten_with_path(like)
+        ordered = []
+        for path, _ in paths:
+            key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+            rec = payload[f"{prefix}/{key}"]
+            ordered.append(np.frombuffer(rec["data"], dtype=rec["dtype"])
+                           .reshape(rec["shape"]))
+        return jax.tree_util.tree_unflatten(treedef, ordered)
+
+    result: dict = {"step": step, "plan": None}
+    if meta.get("plan"):
+        result["plan"] = ExecutionPlan.from_json(json.dumps(meta["plan"]))
+    if params_like is not None:
+        params = rebuild("params", params_like)
+        if shardings is not None:
+            params = jax.device_put(params, shardings)
+        result["params"] = params
+    if opt_like is not None:
+        result["opt"] = rebuild("opt", opt_like)
+    return result

@@ -1,0 +1,75 @@
+"""Gradient compression with error feedback (cross-pod/DCN link optimization).
+
+int8 block-quantization: each block of 256 values shares one fp32 scale
+(absmax).  ``ErrorFeedback`` accumulates the quantization residual locally
+and re-injects it next step — the standard EF-SGD construction that keeps
+compressed training unbiased in time-average.
+
+Intended insertion point: the inter-pod ("pod"-axis) gradient reduction,
+where bandwidth is ~8× scarcer than ICI (DESIGN.md §8).  ``compressed_psum``
+is the shard_map building block: quantize locally → all_gather int8 (4× less
+traffic than fp32 all-reduce ring already, 2× less than bf16) → dequantized
+local sum.  The GSPMD training path keeps XLA-generated collectives; the
+pipeline/pod path can wrap its grad reduction with this primitive
+(train-driver flag ``--compress-pod-grads``).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 256
+
+
+class Compressed(NamedTuple):
+    q: jnp.ndarray          # int8 payload, shape (n_blocks, BLOCK)
+    scale: jnp.ndarray      # fp32, (n_blocks,)
+    orig_len: int
+
+
+def quantize(x: jnp.ndarray) -> Compressed:
+    flat = x.reshape(-1).astype(jnp.float32)
+    n = flat.shape[0]
+    pad = (-n) % BLOCK
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=1) / 127.0
+    safe = jnp.where(scale > 0, scale, 1.0)
+    q = jnp.clip(jnp.round(blocks / safe[:, None]), -127, 127).astype(jnp.int8)
+    return Compressed(q=q, scale=scale, orig_len=n)
+
+
+def dequantize(c: Compressed, shape=None) -> jnp.ndarray:
+    out = (c.q.astype(jnp.float32) * c.scale[:, None]).reshape(-1)[: c.orig_len]
+    return out.reshape(shape) if shape is not None else out
+
+
+class ErrorFeedback(NamedTuple):
+    residual: jnp.ndarray   # same shape as the gradient
+
+
+def ef_init(x: jnp.ndarray) -> ErrorFeedback:
+    return ErrorFeedback(residual=jnp.zeros_like(x, dtype=jnp.float32))
+
+
+def ef_compress(x: jnp.ndarray, ef: ErrorFeedback) -> tuple[Compressed, ErrorFeedback]:
+    corrected = x.astype(jnp.float32) + ef.residual
+    c = quantize(corrected)
+    recon = dequantize(c, corrected.shape)
+    return c, ErrorFeedback(residual=corrected - recon)
+
+
+def compressed_psum(x: jnp.ndarray, axis: str, ef: ErrorFeedback):
+    """shard_map building block: EF-int8 all-gather + local sum over ``axis``.
+
+    Traffic: (n-1)/n · bytes(x)/4 vs 2(n-1)/n · bytes(x) for a ring
+    all-reduce — an ~8× cut on the slow link.  Returns (sum, new_ef).
+    """
+    c, new_ef = ef_compress(x, ef)
+    qs = jax.lax.all_gather(c.q, axis)             # (n, blocks, BLOCK) int8
+    ss = jax.lax.all_gather(c.scale, axis)         # (n, blocks)
+    total = jnp.sum(qs.astype(jnp.float32) * ss[..., None], axis=0)
+    out = total.reshape(-1)[: c.orig_len].reshape(x.shape)
+    return out.astype(x.dtype), new_ef

@@ -1,0 +1,108 @@
+"""Deterministic synthetic data pipeline + abstract input specs.
+
+``input_specs`` returns ``jax.ShapeDtypeStruct`` stand-ins for every model
+input of a (config × shape) cell — the dry-run lowers against these, so no
+full-size array is ever allocated.  ``SyntheticDataset`` produces the same
+token stream for a given (seed, host, step) triple regardless of world size,
+which is what makes elastic restarts and straggler-tolerant data serving
+reproducible: a host only ever materializes its own shard.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import ModelConfig
+from repro.configs.shapes import ShapeSpec
+
+
+def _text_len(cfg: ModelConfig, seq_len: int) -> int:
+    if cfg.family == "vlm":
+        return seq_len - cfg.vis_tokens
+    return seq_len
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec, model=None) -> dict:
+    """Abstract inputs for train/prefill/decode lowering."""
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        st = _text_len(cfg, S)
+        out = {
+            "tokens": jax.ShapeDtypeStruct((B, st), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((B, st), jnp.int32),
+        }
+        if cfg.family == "vlm":
+            out["vis_embeds"] = jax.ShapeDtypeStruct((B, cfg.vis_tokens, cfg.d_model), jnp.bfloat16)
+        if cfg.family == "audio":
+            out["frames"] = jax.ShapeDtypeStruct((B, cfg.enc_frames, cfg.d_model), jnp.bfloat16)
+        return out
+    if shape.kind == "prefill":
+        st = _text_len(cfg, S)
+        out = {"tokens": jax.ShapeDtypeStruct((B, st), jnp.int32)}
+        if cfg.family == "vlm":
+            out["vis_embeds"] = jax.ShapeDtypeStruct((B, cfg.vis_tokens, cfg.d_model), jnp.bfloat16)
+        if cfg.family == "audio":
+            out["frames"] = jax.ShapeDtypeStruct((B, cfg.enc_frames, cfg.d_model), jnp.bfloat16)
+        return out
+    if shape.kind == "decode":
+        assert model is not None, "decode specs need the model for its cache pytree"
+        return {
+            "tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32),
+            "cache": model.abstract_cache(B, S),
+            "cache_index": jax.ShapeDtypeStruct((), jnp.int32),
+            "kv_len": jax.ShapeDtypeStruct((B,), jnp.int32),
+        }
+    raise ValueError(shape.kind)
+
+
+# --------------------------------------------------------------------------
+# synthetic stream
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class SyntheticDataset:
+    """Deterministic LM data: next-token prediction over a hashed stream.
+
+    The stream for global sample ``i`` depends only on (seed, i), so any
+    host/worker layout yields identical global batches — resharding after an
+    elastic event never replays or skips data.
+    """
+
+    cfg: ModelConfig
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+
+    def _tokens(self, sample_ids: np.ndarray) -> np.ndarray:
+        st = _text_len(self.cfg, self.seq_len)
+        rng = np.random.Generator(np.random.Philox(key=self.seed, counter=0))
+        # per-sample independent Philox streams keyed by sample id
+        out = np.empty((len(sample_ids), st + 1), np.int32)
+        for row, sid in enumerate(sample_ids):
+            g = np.random.Generator(np.random.Philox(key=self.seed * 1_000_003 + int(sid)))
+            out[row] = g.integers(0, self.cfg.vocab_size, st + 1, dtype=np.int32)
+        return out
+
+    def global_ids(self, step: int) -> np.ndarray:
+        start = step * self.global_batch
+        return np.arange(start, start + self.global_batch, dtype=np.int64)
+
+    def batch(self, step: int, host_id: int = 0, num_hosts: int = 1) -> dict:
+        """Host-local shard of the global batch (rows host_id::num_hosts)."""
+        ids = self.global_ids(step)[host_id::num_hosts]
+        toks = self._tokens(ids)
+        batch = {
+            "tokens": toks[:, :-1],
+            "labels": toks[:, 1:].copy(),
+        }
+        if self.cfg.family == "vlm":
+            batch["vis_embeds"] = np.zeros(
+                (len(ids), self.cfg.vis_tokens, self.cfg.d_model), np.float32)
+        if self.cfg.family == "audio":
+            g = np.random.Generator(np.random.Philox(key=self.seed + 7))
+            batch["frames"] = g.standard_normal(
+                (len(ids), self.cfg.enc_frames, self.cfg.d_model)).astype(np.float32)
+        return batch

@@ -1,0 +1,61 @@
+"""Elastic scaling: node failure -> re-search -> reshard -> resume.
+
+Galvatron's automation *is* the elasticity mechanism: when the world size
+changes, re-running the search engine for the surviving device count yields
+a new optimal plan within seconds, and the canonical checkpoint reshards
+onto the new mesh.  At 1000+ nodes the same flow handles planned elasticity
+(capacity arriving/leaving) and straggler exclusion.
+
+``replan`` is pure (no jax device state); the driver (launch/train.py) calls
+it between steps when it detects membership change.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.configs.registry import ModelConfig
+from repro.core.cluster import ClusterSpec, TPU_V5E_POD
+from repro.core.search import SearchEngine
+from repro.core.strategy import ExecutionPlan
+
+
+@dataclasses.dataclass
+class ElasticEvent:
+    old_devices: int
+    new_devices: int
+    reason: str = "node-failure"
+
+
+def surviving_mesh(devices: int, *, model_axis: int = 16) -> tuple[tuple, tuple]:
+    """Largest (data, model) mesh using <= devices with the given model axis.
+
+    TPU slices fail in whole hosts; we conservatively drop to the next
+    power-of-two data dimension so the mesh stays rectangular."""
+    model_axis = min(model_axis, devices)
+    data = devices // model_axis
+    p = 1
+    while p * 2 <= data:
+        p *= 2
+    return (p, model_axis), ("data", "model")
+
+
+def replan(
+    cfg: ModelConfig,
+    event: ElasticEvent,
+    seq_len: int,
+    global_batch: int,
+    *,
+    cluster: ClusterSpec = TPU_V5E_POD,
+    arch: str = "",
+    shape_name: str = "",
+) -> ExecutionPlan:
+    mesh_shape, mesh_axes = surviving_mesh(event.new_devices)
+    engine = SearchEngine(cfg, dataclasses.replace(
+        cluster, chips=int(mesh_shape[0] * mesh_shape[1])))
+    res = engine.search(seq_len, global_batch, mesh_shape=mesh_shape,
+                        mesh_axes=mesh_axes, pp_options=[1],
+                        arch=arch, shape_name=shape_name)
+    plan = res.plan
+    plan.notes += f" | elastic replan: {event.old_devices}->{event.new_devices} ({event.reason})"
+    return plan

@@ -1,0 +1,170 @@
+"""Pipeline-parallel training path (plan.pp > 1).
+
+Embedding / lm-head / loss run data-parallel on every stage (replicated over
+the pipe axis — cheap relative to the block stack and charged by the cost
+model); the block stack is staged over the "pod" axis with the GPipe schedule
+in :mod:`repro.parallel.pipeline`.  Supports the stacked-block families
+(dense / vlm / moe / ssm) with a uniform per-stage strategy.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.strategy import ExecutionPlan
+from repro.parallel import sharding as shd
+from repro.parallel.axes import axis_rules
+from repro.parallel.pipeline import pipeline_forward, stage_stack
+from repro.parallel.remat import apply_remat
+from repro.runtime import optimizer as opt_lib
+from repro.runtime.train import softmax_xent
+from repro.models import embedding as emb_lib
+from repro.models.norms import rmsnorm
+
+
+@dataclasses.dataclass
+class PipelineTrainer:
+    model: Any
+    plan: ExecutionPlan
+    mesh: Mesh
+    opt_cfg: opt_lib.AdamWConfig = dataclasses.field(default_factory=opt_lib.AdamWConfig)
+    pipe_axis: str = "pod"
+
+    def __post_init__(self):
+        assert self.plan.pp > 1
+        assert getattr(self.model, "supports_layer_grouping", True), \
+            "PP path needs a stacked-block model family"
+        if self.model.cfg.num_experts:
+            # XLA's SPMD partitioner check-fails on the MoE dispatch scatter
+            # inside a partial-manual shard_map region (tracked upstream); MoE
+            # archs use the GSPMD path with the pod axis folded into DP.
+            raise NotImplementedError("pipeline runtime does not support MoE; "
+                                      "use the GSPMD path (pod axis -> DP)")
+        self.num_stages = self.plan.pp
+        self.strategy = self.plan.default_strategy
+        self._rules = shd.act_rules(self.plan, self.strategy, self.mesh)
+        base = shd.param_spec_tree(self.model, _uniform(self.plan), self.mesh, kind="param")
+        self.param_specs = _stage_specs(base, self.pipe_axis)
+        self.grad_specs = _stage_specs(
+            shd.param_spec_tree(self.model, _uniform(self.plan), self.mesh, kind="grad"),
+            self.pipe_axis)
+        self.opt_specs = _stage_specs(
+            shd.param_spec_tree(self.model, _uniform(self.plan), self.mesh, kind="opt"),
+            self.pipe_axis)
+
+    # ------------------------------------------------------------ params
+    def stage_params(self, params):
+        out = dict(params)
+        out["blocks"] = stage_stack(params["blocks"], self.num_stages)
+        return out
+
+    def init_params(self, key):
+        return self.stage_params(self.model.init(key))
+
+    def abstract_params(self):
+        import numpy as np
+
+        flat = self.model.abstract()
+        out = dict(flat)
+        out["blocks"] = jax.tree.map(
+            lambda a: jax.ShapeDtypeStruct(
+                (self.num_stages, a.shape[0] // self.num_stages) + a.shape[1:], a.dtype),
+            flat["blocks"])
+        return out
+
+    def init_opt_state(self, params):
+        return opt_lib.adamw_init(params, self.opt_cfg)
+
+    def abstract_opt_state(self):
+        return opt_lib.abstract_adamw_state(self.abstract_params(), self.opt_cfg)
+
+    def shardings(self, specs):
+        return jax.tree.map(lambda s: NamedSharding(self.mesh, s), specs,
+                            is_leaf=lambda x: isinstance(x, P))
+
+    def _constrain(self, tree, specs):
+        return jax.tree.map(
+            lambda x, s: jax.lax.with_sharding_constraint(x, NamedSharding(self.mesh, s))
+            if hasattr(x, "shape") else x, tree, specs)
+
+    # ------------------------------------------------------------ loss
+    def loss_fn(self, params, batch):
+        model, cfg = self.model, self.model.cfg
+        tokens, labels = batch["tokens"], batch["labels"]
+        B = tokens.shape[0]
+        M = max(self.plan.grad_accum, self.num_stages)
+        mb = B // M
+
+        x = emb_lib.embed_tokens(params["embed"], tokens, jnp.bfloat16)
+        if "vis_embeds" in batch:
+            x = jnp.concatenate([batch["vis_embeds"].astype(x.dtype), x], axis=1)
+        seq, D = x.shape[1], x.shape[2]
+        x_micro = x.reshape(M, mb, seq, D)
+
+        def apply_block(bp, h):
+            out = self.model.block_apply(bp, h, mode="train")
+            return out[0]  # (x, cache, extra) -> activations only (PP drops aux)
+
+        def stage_fn(local_blocks, h):
+            def body(carry, lp):
+                return apply_remat(apply_block, self.strategy.remat)(lp, carry), None
+
+            out, _ = jax.lax.scan(body, h, local_blocks)
+            return out
+
+        outs = pipeline_forward(params["blocks"], x_micro, stage_fn,
+                                mesh=self.mesh, axis=self.pipe_axis)
+        h = outs.reshape(B, seq, D)
+        h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
+        logits = emb_lib.lm_head(params["embed"], h, cfg)
+        off = self.model.text_offset()
+        if off:
+            logits = logits[:, off:, :]
+        loss, metrics = softmax_xent(logits, labels)
+        return loss, metrics
+
+    # ------------------------------------------------------------ step
+    def train_step(self, params, opt_state, batch):
+        with axis_rules(self._rules):
+            (loss, metrics), grads = jax.value_and_grad(
+                self.loss_fn, has_aux=True)(params, batch)
+            grads = self._constrain(grads, self.grad_specs)
+            new_params, new_opt, stats = opt_lib.adamw_update(
+                params, grads, opt_state, self.opt_cfg)
+            new_params = self._constrain(new_params, self.param_specs)
+            metrics = dict(metrics)
+            metrics["loss"] = loss
+            metrics.update(stats)
+        return new_params, new_opt, metrics
+
+    def jit_train_step(self, donate: bool = True):
+        ps = self.shardings(self.param_specs)
+        os_ = opt_lib.AdamWState(
+            step=NamedSharding(self.mesh, P()),
+            m=self.shardings(self.opt_specs), v=self.shardings(self.opt_specs))
+        return jax.jit(self.train_step, in_shardings=(ps, os_, None),
+                       donate_argnums=(0, 1) if donate else ())
+
+
+def _uniform(plan: ExecutionPlan) -> ExecutionPlan:
+    """Plan with uniform strategy (PP path applies one strategy per stage)."""
+    return dataclasses.replace(
+        plan, layer_strategies=[plan.default_strategy] * len(plan.layer_strategies))
+
+
+def _stage_specs(spec_tree: dict, pipe_axis: str) -> dict:
+    """Prepend the pipe-axis sharding to every blocks spec (staged dim0)."""
+    out = dict(spec_tree)
+
+    def add(s: P) -> P:
+        parts = tuple(s)
+        # original dim0 is "layers" (never sharded) -> replace by (pipe, None)
+        return P(pipe_axis, *((None,) + parts[1:] if parts else (None,)))
+
+    out["blocks"] = jax.tree.map(
+        lambda s: add(s), spec_tree["blocks"], is_leaf=lambda x: isinstance(x, P))
+    return out

@@ -1,0 +1,29 @@
+"""Helper: run a python snippet in a subprocess with N fake XLA devices.
+
+jax pins the device count at first backend init, so anything needing a
+multi-device mesh (GSPMD equivalence, pipeline tests, dry-run smoke) runs in
+a fresh interpreter with XLA_FLAGS set before the jax import.
+"""
+from __future__ import annotations
+
+import os
+import pathlib
+import subprocess
+import sys
+
+SRC = str(pathlib.Path(__file__).resolve().parents[1] / "src")
+
+
+def run_with_devices(code: str, n_devices: int = 8, timeout: int = 420) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run(
+        [sys.executable, "-c", code], env=env, capture_output=True, text=True,
+        timeout=timeout,
+    )
+    if proc.returncode != 0:
+        raise AssertionError(
+            f"subprocess failed (rc={proc.returncode})\nstdout:\n{proc.stdout}\n"
+            f"stderr:\n{proc.stderr[-4000:]}")
+    return proc.stdout

@@ -1,0 +1,11 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — smoke tests and benches must
+see the real single CPU device; multi-device tests spawn subprocesses (see
+tests/_mp.py) so the 512-device dry-run flag never leaks into this process.
+"""
+import jax
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)

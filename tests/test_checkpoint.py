@@ -1,0 +1,84 @@
+"""Checkpoint: atomic save/restore roundtrip, GC, elastic replan + regroup."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import get_config
+from repro.core.strategy import ExecutionPlan, LayerStrategy
+from repro.models import build_model
+from repro.runtime import checkpoint as ckpt
+from repro.runtime.data import SyntheticDataset
+from repro.runtime.elastic import ElasticEvent, replan, surviving_mesh
+from repro.runtime.train import construct_hybrid_parallel_model
+
+
+def _setup(rng):
+    cfg = get_config("llama3.2-1b").reduced()
+    model = build_model(cfg)
+    strat = LayerStrategy()
+    plan = ExecutionPlan(arch="llama3.2-1b", shape="t", mesh_axes=("data",),
+                         mesh_shape=(1,), layer_strategies=[strat] * cfg.num_layers,
+                         default_strategy=strat)
+    hp = construct_hybrid_parallel_model(model, plan)
+    return cfg, model, plan, hp
+
+
+def test_roundtrip(tmp_path, rng):
+    cfg, model, plan, hp = _setup(rng)
+    params = hp.init_params(rng)
+    opt = hp.init_opt_state(params)
+    ckpt.save(tmp_path, 7, hp.ungroup(params), opt, plan)
+    assert ckpt.latest_step(tmp_path) == 7
+    out = ckpt.restore(tmp_path, params_like=hp.ungroup(params), opt_like=opt)
+    assert out["step"] == 7
+    for a, b in zip(jax.tree.leaves(hp.ungroup(params)), jax.tree.leaves(out["params"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert out["plan"].layer_strategies == plan.layer_strategies
+
+
+def test_gc_keeps_latest(tmp_path, rng):
+    cfg, model, plan, hp = _setup(rng)
+    params = hp.ungroup(hp.init_params(rng))
+    for step in (1, 2, 3, 4, 5):
+        ckpt.save(tmp_path, step, params, None, plan, keep=2)
+    steps = sorted(int(p.stem[4:]) for p in tmp_path.glob("step*.ckpt"))
+    assert steps == [4, 5]
+    assert ckpt.latest_step(tmp_path) == 5
+
+
+def test_elastic_replan_and_resume(tmp_path, rng):
+    """Save under plan A, lose devices, re-search plan B, restore + step."""
+    cfg, model, plan, hp = _setup(rng)
+    params = hp.init_params(rng)
+    opt = hp.init_opt_state(params)
+    ds = SyntheticDataset(cfg, seq_len=16, global_batch=2)
+    batch = {k: jnp.asarray(v) for k, v in ds.batch(0).items()}
+    params, opt, m0 = hp.jit_train_step(donate=False)(params, opt, batch)
+    ckpt.save(tmp_path, 1, hp.ungroup(params), None, plan)
+
+    event = ElasticEvent(old_devices=256, new_devices=192)
+    new_plan = replan(get_config("llama3.2-1b"), event, 4096, 256)
+    assert new_plan.num_devices <= 192
+    assert "elastic replan" in new_plan.notes
+
+    # restore the canonical params and regroup for a (heterogeneous) new plan
+    strats = ([LayerStrategy(remat="selective")] * (cfg.num_layers // 2)
+              + [LayerStrategy()] * (cfg.num_layers - cfg.num_layers // 2))
+    plan_b = ExecutionPlan(arch="llama3.2-1b", shape="t", mesh_axes=("data",),
+                           mesh_shape=(1,), layer_strategies=strats,
+                           default_strategy=strats[0])
+    hp_b = construct_hybrid_parallel_model(model, plan_b)
+    restored = ckpt.restore(tmp_path, params_like=hp.ungroup(params))["params"]
+    params_b = hp_b.group(jax.tree.map(jnp.asarray, restored))
+    opt_b = hp_b.init_opt_state(params_b)
+    _, _, m1 = hp_b.jit_train_step(donate=False)(params_b, opt_b, batch)
+    assert np.isfinite(float(m1["loss"]))
+    # same weights, same batch => same loss across plans
+    np.testing.assert_allclose(float(m1["loss"]), float(
+        hp.jit_train_step(donate=False)(params, opt, batch)[2]["loss"]), rtol=0.2)
+
+
+def test_surviving_mesh_shapes():
+    assert surviving_mesh(256) == ((16, 16), ("data", "model"))
+    assert surviving_mesh(192) == ((8, 16), ("data", "model"))
+    assert surviving_mesh(8, model_axis=16) == ((1, 8), ("data", "model"))

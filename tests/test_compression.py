@@ -1,0 +1,47 @@
+"""Gradient compression: quantization error bounds + error-feedback property."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.runtime.compression import (dequantize, ef_compress, ef_init,
+                                       quantize)
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), n=st.integers(1, 2000))
+def test_quantize_error_bound(seed, n):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal(n), jnp.float32) * rng.uniform(0.1, 10)
+    c = quantize(x)
+    back = dequantize(c, x.shape)
+    # per-block absmax scaling: |err| <= scale/2 per element
+    blocks = np.abs(np.asarray(x)).reshape(-1) if n % 256 == 0 else None
+    err = np.abs(np.asarray(back) - np.asarray(x))
+    scale_bound = np.max(np.abs(np.asarray(x))) / 127.0
+    assert err.max() <= scale_bound * 1.01 + 1e-7
+
+
+def test_error_feedback_time_average_unbiased():
+    """EF compression: the cumulative transmitted sum tracks the true
+    cumulative gradient (residual stays bounded)."""
+    rng = np.random.default_rng(0)
+    g = jnp.asarray(rng.standard_normal(512), jnp.float32)
+    ef = ef_init(g)
+    sent_total = np.zeros(512, np.float64)
+    true_total = np.zeros(512, np.float64)
+    for step in range(50):
+        gt = g * (1.0 + 0.01 * step)
+        c, ef = ef_compress(gt, ef)
+        sent_total += np.asarray(dequantize(c, gt.shape), np.float64)
+        true_total += np.asarray(gt, np.float64)
+    resid = np.abs(sent_total - true_total)
+    bound = np.max(np.abs(true_total)) / 127.0 * 2 + 1e-3
+    assert resid.max() < bound, resid.max()
+
+
+def test_compression_ratio():
+    x = jnp.ones((1024,), jnp.float32)
+    c = quantize(x)
+    payload = c.q.size + c.scale.size * 4
+    assert payload < x.size * 4 / 3.5     # ~3.9x smaller than fp32

@@ -1,0 +1,117 @@
+"""Cost/memory model invariants + profiler exactness against real models."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.registry import ARCH_IDS, get_config
+from repro.core import cost_model as cm
+from repro.core import memory_model as mm
+from repro.core.cluster import TPU_V5E_POD
+from repro.core.profiler_model import profile_model
+from repro.core.strategy import LayerStrategy
+from repro.models.common import count_params
+
+
+def _env(devices=256, micro=256, ga=1, pp=1):
+    return cm.CostEnv(cluster=TPU_V5E_POD, devices=devices, pp=pp,
+                      micro_batch=micro, grad_accum=ga)
+
+
+# ------------------------------------------------------------ profiler exactness
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_profile_param_count_matches_model(arch):
+    """The analytic profiler must count exactly the params the model creates."""
+    from repro.models import build_model
+
+    cfg = get_config(arch)
+    model = build_model(cfg)
+    actual = count_params(model.param_defs())
+    prof = profile_model(cfg, 128)
+    assert prof.total_params() == pytest.approx(actual, rel=0.02), (
+        f"{arch}: profiler {prof.total_params():.3e} vs model {actual:.3e}")
+
+
+# ------------------------------------------------------------ time model
+def test_tp_reduces_compute_time():
+    """At equal per-device local batch, tp=16 cuts compute ~16x (modulo the
+    ceil-padding waste of 40 heads on 16 shards)."""
+    prof = profile_model(get_config("qwen3-14b"), 4096)
+    lp = prof.layers[0]
+    t1 = cm.compute_time(lp, LayerStrategy(tp=1), _env(micro=256))    # local=1
+    t16 = cm.compute_time(lp, LayerStrategy(tp=16), _env(micro=16))   # local=1
+    assert t16 < t1
+    # padding waste: 40 heads on 16 shards costs more than ideal 16x
+    assert t16 > t1 / 16.0
+
+
+def test_remat_costs_compute():
+    prof = profile_model(get_config("llama3.2-1b"), 4096)
+    lp = prof.layers[0]
+    base = cm.compute_time(lp, LayerStrategy(), _env())
+    sel = cm.compute_time(lp, LayerStrategy(remat="selective"), _env())
+    full = cm.compute_time(lp, LayerStrategy(remat="full"), _env())
+    assert base < sel < full
+
+
+def test_tp_comm_scales_with_tokens():
+    prof = profile_model(get_config("llama3.2-1b"), 4096)
+    lp = prof.layers[0]
+    s = LayerStrategy(tp=16)
+    small = cm.tp_comm_time(lp, s, _env(micro=64))
+    big = cm.tp_comm_time(lp, s, _env(micro=256))
+    # proportional up to the fixed alpha (latency) term
+    assert big == pytest.approx(4 * small, rel=0.02)
+
+
+def test_zero3_adds_dp_traffic():
+    prof = profile_model(get_config("llama3.2-1b"), 4096)
+    lp = prof.layers[0]
+    t1 = cm.dp_comm_time(lp, LayerStrategy(zero=1), _env())
+    t3 = cm.dp_comm_time(lp, LayerStrategy(zero=3), _env())
+    assert t3 != t1 and t3 > 0 and t1 > 0
+
+
+# ------------------------------------------------------------ memory model
+@settings(max_examples=25, deadline=None)
+@given(zero_lo=st.integers(0, 2))
+def test_memory_monotone_in_zero_stage(zero_lo):
+    prof = profile_model(get_config("qwen3-14b"), 4096)
+    lp = prof.layers[0]
+    lo = mm.layer_state_bytes(lp, LayerStrategy(zero=zero_lo), _env())
+    hi = mm.layer_state_bytes(lp, LayerStrategy(zero=zero_lo + 1), _env())
+    assert hi <= lo
+
+
+def test_memory_monotone_in_remat():
+    prof = profile_model(get_config("qwen3-14b"), 4096)
+    lp = prof.layers[0]
+    n = mm.layer_act_bytes(lp, LayerStrategy(remat="none"), _env())
+    s = mm.layer_act_bytes(lp, LayerStrategy(remat="selective"), _env())
+    f = mm.layer_act_bytes(lp, LayerStrategy(remat="full"), _env())
+    assert f < s < n
+
+
+def test_shared_params_counted_once():
+    cfg = get_config("zamba2-7b")
+    prof = profile_model(cfg, 4096)
+    shared = [lp for lp in prof.layers if lp.shared_group == "shared_attn"]
+    assert len(shared) == cfg.num_layers // cfg.attn_every
+    total = prof.total_params()
+    double = total + sum(lp.param_count for lp in shared[1:])
+    assert double > total     # i.e. total really deduplicated
+
+
+def test_moe_active_params_flops():
+    cfg = get_config("grok-1-314b")
+    prof = profile_model(cfg, 4096)
+    n_total = prof.total_params()
+    per_tok = prof.model_flops_per_token()
+    assert n_total > 250e9                 # ~314B total
+    assert per_tok < 6 * n_total * 0.5     # top-2 of 8 => much less than 6N
+
+
+def test_kv_cache_bytes_families():
+    dense = mm.kv_cache_bytes(get_config("qwen3-14b"), 128, 32768)
+    ssm = mm.kv_cache_bytes(get_config("mamba2-2.7b"), 128, 32768)
+    assert dense > 100e9
+    assert ssm < dense / 10    # SSM state is O(1) in seq

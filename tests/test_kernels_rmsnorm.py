@@ -1,0 +1,27 @@
+"""Fused RMSNorm kernel sweep vs oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.rmsnorm.kernel import rmsnorm_pallas
+from repro.kernels.rmsnorm.ref import rmsnorm_reference
+
+
+@pytest.mark.parametrize("shape", [(4, 64, 256), (2, 128, 512), (7, 384), (1, 1, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm_matches_reference(shape, dtype, rng):
+    x = jax.random.normal(rng, shape, dtype)
+    scale = jax.random.normal(jax.random.PRNGKey(1), shape[-1:], jnp.float32)
+    out = rmsnorm_pallas(x, scale, interpret=True)
+    ref = rmsnorm_reference(x, scale)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=tol, rtol=tol)
+
+
+def test_rmsnorm_unit_scale_is_unit_rms(rng):
+    x = jax.random.normal(rng, (8, 256)) * 3.0
+    out = rmsnorm_pallas(x, jnp.ones((256,)), interpret=True)
+    rms = np.sqrt(np.mean(np.asarray(out) ** 2, axis=-1))
+    np.testing.assert_allclose(rms, 1.0, atol=1e-3)
