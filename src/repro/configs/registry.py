@@ -92,6 +92,11 @@ class ModelConfig:
             vocab_size=512,
             num_experts=min(self.num_experts, 4),
             experts_per_token=min(self.experts_per_token, 2),
+            # ample capacity at smoke scale: random-init routing is highly
+            # correlated (near-uniform router logits on a correlated residual
+            # stream), so production cf overflows experts and the resulting
+            # batch-dependent drops break train/prefill/decode comparisons
+            moe_capacity_factor=max(self.moe_capacity_factor, 4.0),
             shared_expert_ff=128 if self.shared_expert_ff else 0,
             ssm_state=min(self.ssm_state, 16),
             ssm_head_dim=32 if self.ssm_state else 64,

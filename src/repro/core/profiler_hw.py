@@ -70,9 +70,11 @@ def measure_allreduce(sizes_bytes=None, iters: int = 8) -> FittedComm:
     import jax
     import jax.numpy as jnp
 
+    from repro import compat
+
     n = jax.device_count()
     sizes_bytes = sizes_bytes or [1 << k for k in range(12, 22, 2)]
-    mesh = jax.make_mesh((n,), ("x",))
+    mesh = compat.make_mesh((n,), ("x",))
     xs, ys = [], []
     for sz in sizes_bytes:
         elems = max(sz // 4, n)
@@ -81,9 +83,9 @@ def measure_allreduce(sizes_bytes=None, iters: int = 8) -> FittedComm:
         def f(a):
             return jax.lax.psum(a, "x")
 
-        g = jax.jit(jax.shard_map(f, mesh=mesh,
-                                  in_specs=jax.sharding.PartitionSpec("x"),
-                                  out_specs=jax.sharding.PartitionSpec()))
+        g = jax.jit(compat.shard_map(f, mesh=mesh,
+                                     in_specs=compat.P("x"),
+                                     out_specs=compat.P()))
         a = jnp.ones((elems,), jnp.float32)
         g(a).block_until_ready()
         ts = []

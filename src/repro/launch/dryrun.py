@@ -36,7 +36,7 @@ from repro.configs.registry import ARCH_IDS, get_config
 from repro.configs.shapes import SHAPES, supports_shape
 from repro.core.search import SearchEngine, serving_plan
 from repro.launch.hlo_stats import collective_stats
-from repro.launch.mesh import make_production_mesh
+from repro.launch.mesh import make_mesh, make_production_mesh
 from repro.models import build_model
 from repro.runtime.data import input_specs
 from repro.runtime.serve import ServingEngine
@@ -89,9 +89,7 @@ def run_cell(arch: str, shape_id: str, *, multi_pod: bool = False,
     cfg = get_config(arch)
     spec = SHAPES[shape_id]
     if custom_mesh is not None:                      # §Perf: alternative meshes
-        import jax as _jax
-
-        mesh = _jax.make_mesh(tuple(custom_mesh), ("data", "model"))
+        mesh = make_mesh(tuple(custom_mesh), ("data", "model"))
         mesh_tag = "x".join(map(str, custom_mesh))
     else:
         mesh = make_production_mesh(multi_pod=multi_pod)

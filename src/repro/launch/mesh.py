@@ -7,18 +7,19 @@ carries either pipeline parallelism (PipelineTrainer) or an extra
 data-parallel/ZeRO dimension (GSPMD path) — see DESIGN.md §2.
 
 ``make_mesh`` builds arbitrary (dp, tp) meshes for free-mode searched plans
-and CPU-scale tests.
+and CPU-scale tests.  Both go through :mod:`repro.compat` so mesh
+construction works across JAX releases.
 """
 from __future__ import annotations
 
-import jax
+from repro import compat
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes)
+    return compat.make_mesh(shape, axes)
 
 
 def make_mesh(shape, axes):
-    return jax.make_mesh(tuple(shape), tuple(axes))
+    return compat.make_mesh(tuple(shape), tuple(axes))

@@ -24,6 +24,7 @@ import numpy as np
 
 from repro.configs.registry import ARCH_IDS, ModelConfig, get_config
 from repro.core.search import SearchEngine
+from repro.launch import mesh as mesh_lib
 from repro.core.strategy import ExecutionPlan, LayerStrategy
 from repro.models import build_model
 from repro.runtime import checkpoint as ckpt_lib
@@ -79,7 +80,7 @@ def main(argv=None):
                                        mesh_axes=("data", "model"), pp_options=[1],
                                        arch=cfg.name)
         plan = res.plan
-        mesh = jax.make_mesh(shape, ("data", "model"))
+        mesh = mesh_lib.make_mesh(shape, ("data", "model"))
     print(f"plan: {plan.default_strategy.short()} ga={plan.grad_accum} "
           f"groups={len(plan.groups())}")
 

@@ -38,11 +38,17 @@ CHUNK_KV = 1024
 
 def attn_defs(cfg: ModelConfig, cross: bool = False) -> dict:
     d, h, kv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    # ParamDef's default fan-in heuristic (shape[-2]) is wrong for these 3-D
+    # projections: q/k/v contract over d_model and wo over h·hd, so the std
+    # must be set explicitly or q/k/v come out ~sqrt(d/kv)× too hot — enough
+    # to blow up the residual stream through a shared attention block
+    # (observed: zamba2 activations at 10× scale, grad norms at 300+, loss
+    # oscillating under the clipped optimizer).
     defs = {
-        "wq": ParamDef((d, h, hd), ("embed", "q_heads", "head_dim")),
-        "wk": ParamDef((d, kv, hd), ("embed", "kv_heads", "head_dim")),
-        "wv": ParamDef((d, kv, hd), ("embed", "kv_heads", "head_dim")),
-        "wo": ParamDef((h, hd, d), ("q_heads", "head_dim", "embed")),
+        "wq": ParamDef((d, h, hd), ("embed", "q_heads", "head_dim"), scale=d ** -0.5),
+        "wk": ParamDef((d, kv, hd), ("embed", "kv_heads", "head_dim"), scale=d ** -0.5),
+        "wv": ParamDef((d, kv, hd), ("embed", "kv_heads", "head_dim"), scale=d ** -0.5),
+        "wo": ParamDef((h, hd, d), ("q_heads", "head_dim", "embed"), scale=(h * hd) ** -0.5),
     }
     if cfg.qkv_bias and not cross:
         defs["bq"] = ParamDef((h, hd), ("q_heads", "head_dim"), init="zeros")

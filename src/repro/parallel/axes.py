@@ -15,7 +15,8 @@ from dataclasses import dataclass, field
 from typing import Optional, Sequence
 
 import jax
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.compat import Mesh, NamedSharding, P, current_mesh_context
 
 _CTX = threading.local()
 
@@ -115,29 +116,27 @@ def lc(x, *logical_axes: str | None):
     """Logical sharding constraint on an activation (no-op outside a mesh).
 
     Inside a partial-auto ``shard_map`` region the constraint is built on the
-    *current abstract mesh* (whose manual axes are typed Manual) — a sharding
-    built on the outer concrete mesh would be rejected there.  Rule targets
-    that are manual in the current context are dropped (the manual axis is
-    already fully applied by shard_map itself).
+    mesh :func:`repro.compat.current_mesh_context` reports — the current
+    abstract mesh on new JAX (a sharding built on the outer concrete mesh
+    would be rejected there), the concrete mesh on JAX releases without the
+    abstract-mesh API.  Rule targets that are manual in the current context
+    are dropped either way (the manual axis is already fully applied by
+    shard_map itself).
     """
     rules = current_rules()
     if rules is None or rules.mesh is None:
         return x
     mesh = rules.mesh
-    ctx = jax.sharding.get_abstract_mesh()
-    if ctx is not None and not ctx.empty and set(ctx.axis_names) == set(mesh.axis_names):
-        manual = {n for n, t in zip(ctx.axis_names, ctx.axis_types)
-                  if t == jax.sharding.AxisType.Manual}
-        if manual:
-            filtered = {}
-            for k, v in rules.rules.items():
-                targets = v if isinstance(v, tuple) else (v,)
-                keep = tuple(t for t in targets if t not in manual)
-                if keep:
-                    filtered[k] = keep if len(keep) > 1 else keep[0]
-            rules = MeshRules(rules=filtered, mesh=mesh)
-        mesh = ctx
+    ctx_mesh, manual = current_mesh_context(mesh)
+    if manual:
+        filtered = {}
+        for k, v in rules.rules.items():
+            targets = v if isinstance(v, tuple) else (v,)
+            keep = tuple(t for t in targets if t not in manual)
+            if keep:
+                filtered[k] = keep if len(keep) > 1 else keep[0]
+        rules = MeshRules(rules=filtered, mesh=mesh)
     spec = rules.spec(logical_axes)
     if all(s is None for s in spec):
         return x
-    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+    return jax.lax.with_sharding_constraint(x, NamedSharding(ctx_mesh, spec))

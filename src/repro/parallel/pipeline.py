@@ -1,15 +1,26 @@
-"""GPipe-schedule pipeline parallelism via partial-auto ``shard_map``.
+"""GPipe-schedule pipeline parallelism (two lowerings, one schedule).
 
-The pipeline ("pod") axis is *manual*: activations move stage→stage with
-``jax.lax.ppermute``.  The remaining mesh axes ("data", "model") stay *auto*,
+The pipeline ("pod") axis is *manual*: activations move stage→stage with a
+collective permute.  The remaining mesh axes ("data", "model") stay *auto*,
 so inside a stage the usual GSPMD sharding constraints (DP batch sharding,
 Megatron TP, ZeRO) keep working — this is the TPU-native mapping of
 Galvatron's "PP outermost, across the slowest links" decision-tree take-away
 (DESIGN.md §2): cross-pod links are the slowest, PP traffic is the smallest.
 
+Two lowerings, selected by :mod:`repro.compat`:
+
+* **partial-auto shard_map** (new JAX): the pod axis is manual inside the
+  body (``jax.lax.ppermute`` moves activations), other axes stay auto.
+* **pure GSPMD** (JAX releases whose partial-auto shard_map cannot partition
+  collectives, e.g. 0.4.x on CPU): the stage dim stays *explicit*, stages
+  compute under ``jax.vmap``, the stage dim is sharding-constrained onto the
+  pod axis, and ``jnp.roll`` on the stage dim lowers to the same
+  collective-permute.  Identical schedule and math, so the two lowerings are
+  interchangeable (asserted by the pipeline-equivalence tests).
+
 The tick loop runs ``M + S - 1`` steps (M microbatches, S stages); jax
 autodiff reverses the schedule for the backward pass automatically (the
-transpose of ppermute is the reverse ppermute), reproducing GPipe's
+transpose of a permute is the reverse permute), reproducing GPipe's
 fwd-then-bwd bubble shape.  Idle stages compute on garbage inputs — exactly
 the (S-1)/(M+S-1) bubble the cost model charges for PP.
 """
@@ -19,7 +30,9 @@ from typing import Callable
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, PartitionSpec as P
+
+from repro import compat
+from repro.compat import Mesh, NamedSharding, P
 
 
 def pipeline_forward(
@@ -30,13 +43,20 @@ def pipeline_forward(
     mesh: Mesh,
     axis: str = "pod",
 ) -> jnp.ndarray:
-    """Returns (M, mb, seq, D) outputs of the final stage (replicated on axis).
+    """Returns (M, mb, seq, D) outputs of the final stage.
 
     The stage boundary is kept fp32: the backward pass psums the input
     cotangent over the pipe axis, and a bf16 all-reduce trips an XLA-CPU
     AllReducePromotion crash (and loses precision on real hardware anyway).
     ``stage_fn`` should cast to bf16 internally for compute.
     """
+    if compat.HAS_TOPLEVEL_SHARD_MAP:
+        return _forward_shard_map(stage_params, x_micro, stage_fn,
+                                  mesh=mesh, axis=axis)
+    return _forward_gspmd(stage_params, x_micro, stage_fn, mesh=mesh, axis=axis)
+
+
+def _forward_shard_map(stage_params, x_micro, stage_fn, *, mesh, axis):
     S = mesh.shape[axis]
     M = x_micro.shape[0]
     in_dtype = x_micro.dtype
@@ -71,7 +91,7 @@ def pipeline_forward(
         # axis (which also trips an XLA-CPU AllReducePromotion bug on bf16).
         return outs[None]
 
-    staged = jax.shard_map(
+    staged = compat.shard_map(
         body,
         mesh=mesh,
         in_specs=(P(axis), P()),
@@ -80,6 +100,43 @@ def pipeline_forward(
         check_vma=False,
     )(stage_params, x_micro)
     return staged[-1]
+
+
+def _forward_gspmd(stage_params, x_micro, stage_fn, *, mesh, axis):
+    """Explicit-stage-dim lowering: vmap over stages, roll as the permute.
+
+    ``jnp.roll`` wraps the last stage's output back to stage 0 (a real
+    ppermute leaves it zero), but stage 0 only reads its recv buffer once the
+    feed window has closed — those ticks are the schedule's garbage lanes and
+    never reach ``outs``, so the wrap is harmless.
+    """
+    S = mesh.shape[axis]
+    M = x_micro.shape[0]
+    in_dtype = x_micro.dtype
+    x_micro = x_micro.astype(jnp.float32)
+    stage_sharding = NamedSharding(mesh, P(axis))
+    constrain = lambda a: jax.lax.with_sharding_constraint(a, stage_sharding)
+    is_first = (jnp.arange(S) == 0)[:, None, None, None]
+
+    vstage = jax.vmap(lambda p, h: stage_fn(p, h.astype(in_dtype)).astype(jnp.float32))
+
+    def tick(carry, t):
+        recv, outs = carry                      # (S, mb, seq, D) / (M, mb, seq, D)
+        mb_idx = jnp.clip(t, 0, M - 1)
+        feed = jnp.where(is_first & (t < M), 1.0, 0.0)
+        inp = feed * x_micro[mb_idx][None] + (1.0 - feed) * recv
+        h = constrain(vstage(stage_params, inp))
+        out_idx = jnp.clip(t - (S - 1), 0, M - 1)
+        write = (t >= S - 1) & (t - (S - 1) < M)
+        outs = jax.lax.dynamic_update_index_in_dim(
+            outs, jnp.where(write, h[S - 1], outs[out_idx]), out_idx, 0)
+        recv_next = constrain(jnp.roll(h, 1, axis=0))
+        return (recv_next, outs), None
+
+    outs0 = jnp.zeros_like(x_micro)
+    recv0 = constrain(jnp.zeros((S,) + x_micro.shape[1:], jnp.float32))
+    (_, outs), _ = jax.lax.scan(tick, (recv0, outs0), jnp.arange(M + S - 1))
+    return outs
 
 
 def stage_stack(blocks, num_stages: int):

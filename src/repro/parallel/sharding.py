@@ -25,8 +25,8 @@ from __future__ import annotations
 from typing import Optional
 
 import jax
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.compat import Mesh, NamedSharding, P
 from repro.configs.registry import ModelConfig
 from repro.core.strategy import ExecutionPlan, GroupSpec, LayerStrategy
 from repro.models.common import ParamDef, logical_axes_tree

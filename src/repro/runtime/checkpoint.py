@@ -6,26 +6,150 @@ mechanism behind elastic scaling (runtime/elastic.py): after a world-size
 change the SearchEngine emits a new plan and the same checkpoint reshards
 onto the new mesh via ``device_put`` with the new shardings.
 
-Format: one zstd-compressed msgpack file per checkpoint step containing raw
-array bytes keyed by pytree path, plus a JSON sidecar with the plan and
-bookkeeping.  Writes go to a temp name + atomic rename; a MANIFEST names the
-latest complete step, so a host crash mid-write can never corrupt restore.
+Format: one compressed file per checkpoint step containing raw array bytes
+keyed by pytree path, plus a JSON sidecar with the plan and bookkeeping.
+The file starts with a 7-byte header::
+
+    b"GVCK" | version u8 | codec u8 | serializer u8
+
+The codec byte names the compression codec (zstd/zlib/raw — see the registry
+in :mod:`repro.runtime.compression`; the writer auto-selects the best codec
+available and readers refuse clearly when theirs is missing).  The
+serializer byte names the payload encoding: 0 = the self-contained native
+framing below (JSON index + concatenated raw buffers, zero optional deps),
+1 = msgpack (read-compatibility; only written when explicitly requested).
+Optional dependencies (``zstandard``, ``msgpack``) are imported lazily and
+guarded — importing this module never requires them.
+
+Legacy files from before the header (bare zstd-compressed msgpack) are still
+restorable when both optional deps are present.
+
+Writes go to a temp name + atomic rename; a MANIFEST names the latest
+complete step, so a host crash mid-write can never corrupt restore.
 """
 from __future__ import annotations
 
 import json
 import pathlib
-import shutil
+import struct
 from typing import Any, Optional
 
 import jax
-import jax.numpy as jnp
-import msgpack
 import numpy as np
-import zstandard
 
 from repro.core.strategy import ExecutionPlan
+from repro.runtime import compression
 
+MAGIC = b"GVCK"
+FORMAT_VERSION = 1
+
+SERIALIZER_NATIVE = 0
+SERIALIZER_MSGPACK = 1
+
+
+# --------------------------------------------------------------------------
+# payload serializers
+# --------------------------------------------------------------------------
+
+def _have_msgpack() -> bool:
+    try:
+        import msgpack  # noqa: F401
+        return True
+    except ImportError:
+        return False
+
+
+def _pack_native(payload: dict) -> bytes:
+    """JSON index + concatenated raw buffers — no third-party deps."""
+    index: dict = {}
+    blobs: list[bytes] = []
+    off = 0
+    for key, rec in payload.items():
+        data = rec["data"]
+        index[key] = {"dtype": rec["dtype"], "shape": rec["shape"],
+                      "offset": off, "length": len(data)}
+        blobs.append(data)
+        off += len(data)
+    head = json.dumps(index).encode("utf-8")
+    return struct.pack("<Q", len(head)) + head + b"".join(blobs)
+
+
+def _unpack_native(buf: bytes) -> dict:
+    (head_len,) = struct.unpack_from("<Q", buf, 0)
+    index = json.loads(buf[8:8 + head_len].decode("utf-8"))
+    base = 8 + head_len
+    return {
+        key: {"dtype": rec["dtype"], "shape": rec["shape"],
+              "data": buf[base + rec["offset"]: base + rec["offset"] + rec["length"]]}
+        for key, rec in index.items()
+    }
+
+
+def _serialize(payload: dict, serializer: int) -> bytes:
+    if serializer == SERIALIZER_MSGPACK:
+        import msgpack
+
+        return msgpack.packb(payload, use_bin_type=True)
+    return _pack_native(payload)
+
+
+def _deserialize(buf: bytes, serializer: int) -> dict:
+    if serializer == SERIALIZER_MSGPACK:
+        if not _have_msgpack():
+            raise RuntimeError("checkpoint was serialized with msgpack, which "
+                               "is not installed here")
+        import msgpack
+
+        return msgpack.unpackb(buf, raw=False)
+    if serializer != SERIALIZER_NATIVE:
+        raise ValueError(f"unknown checkpoint serializer byte {serializer}")
+    return _unpack_native(buf)
+
+
+# --------------------------------------------------------------------------
+# blob encode/decode (header + codec + serializer)
+# --------------------------------------------------------------------------
+
+def encode_blob(payload: dict, *, codec: Optional[str] = None,
+                use_msgpack: bool = False) -> bytes:
+    c = compression.best_codec(codec)
+    if use_msgpack and not _have_msgpack():
+        # same contract as an explicit-but-unavailable codec: raise, don't
+        # silently write a framing the caller's target reader can't parse
+        raise RuntimeError("use_msgpack=True requested but msgpack is not "
+                           "installed in this environment")
+    serializer = SERIALIZER_MSGPACK if use_msgpack else SERIALIZER_NATIVE
+    body = c.compress(_serialize(payload, serializer))
+    return MAGIC + bytes([FORMAT_VERSION, c.fmt_byte, serializer]) + body
+
+
+def decode_blob(blob: bytes) -> dict:
+    if blob[:4] != MAGIC:
+        return _decode_legacy(blob)
+    version, codec_byte, serializer = blob[4], blob[5], blob[6]
+    if version != FORMAT_VERSION:
+        raise ValueError(f"unsupported checkpoint format version {version}")
+    c = compression.codec_for_byte(codec_byte)
+    return _deserialize(c.decompress(blob[7:]), serializer)
+
+
+def _decode_legacy(blob: bytes) -> dict:
+    """Pre-header files: bare zstd-compressed msgpack."""
+    try:
+        import msgpack
+        import zstandard
+    except ImportError as e:
+        raise RuntimeError(
+            "legacy checkpoint (no GVCK header) needs the optional "
+            "'zstandard' and 'msgpack' packages to restore; re-save it from "
+            "an environment that has them") from e
+    return msgpack.unpackb(zstandard.ZstdDecompressor().decompress(blob),
+                           raw=False)
+
+
+# --------------------------------------------------------------------------
+# pytree <-> payload
+# --------------------------------------------------------------------------
 
 def _flatten(tree) -> dict:
     flat = {}
@@ -48,6 +172,7 @@ def save(
     *,
     keep: int = 3,
     extra_meta: Optional[dict] = None,
+    codec: Optional[str] = None,           # None = auto (zstd → zlib → raw)
 ) -> pathlib.Path:
     directory = pathlib.Path(directory)
     directory.mkdir(parents=True, exist_ok=True)
@@ -61,14 +186,12 @@ def save(
                 "dtype": str(arr.dtype), "shape": list(arr.shape),
                 "data": arr.tobytes(),
             }
-    blob = zstandard.ZstdCompressor(level=3).compress(
-        msgpack.packb(payload, use_bin_type=True))
+    blob = encode_blob(payload, codec=codec)
 
     tmp = directory / f".tmp-step{step:09d}"
     final = directory / f"step{step:09d}.ckpt"
     tmp.write_bytes(blob)
     tmp.rename(final)                       # atomic on POSIX
-
     meta = {"step": step, "plan": json.loads(plan.to_json()) if plan else None,
             **(extra_meta or {})}
     meta_tmp = directory / f".tmp-meta{step:09d}"
@@ -111,9 +234,7 @@ def restore(
     step = step if step is not None else latest_step(directory)
     if step is None:
         raise FileNotFoundError(f"no checkpoint in {directory}")
-    blob = (directory / f"step{step:09d}.ckpt").read_bytes()
-    payload = msgpack.unpackb(zstandard.ZstdDecompressor().decompress(blob),
-                              raw=False)
+    payload = decode_blob((directory / f"step{step:09d}.ckpt").read_bytes())
     meta = json.loads((directory / f"step{step:09d}.json").read_text())
 
     def rebuild(prefix: str, like):

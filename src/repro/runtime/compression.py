@@ -1,4 +1,5 @@
-"""Gradient compression with error feedback (cross-pod/DCN link optimization).
+"""Gradient compression with error feedback, plus the checkpoint codec
+registry (byte-level compression for checkpoint blobs).
 
 int8 block-quantization: each block of 256 values shares one fp32 scale
 (absmax).  ``ErrorFeedback`` accumulates the quantization residual locally
@@ -15,12 +16,111 @@ pipeline/pod path can wrap its grad reduction with this primitive
 """
 from __future__ import annotations
 
-from typing import NamedTuple
+import dataclasses
+from typing import Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
 BLOCK = 256
+
+
+# --------------------------------------------------------------------------
+# checkpoint codec registry
+# --------------------------------------------------------------------------
+# Codecs compress the serialized checkpoint payload.  Availability is probed
+# lazily (no module-scope imports of optional wheels — the hermetic test
+# environment has neither zstandard nor network); the writer auto-selects the
+# best available codec and records its format byte in the checkpoint header,
+# so files round-trip across environments with different codec sets.
+
+@dataclasses.dataclass(frozen=True)
+class CheckpointCodec:
+    name: str
+    fmt_byte: int                        # recorded in the checkpoint header
+    available: Callable[[], bool]
+    compress: Callable[[bytes], bytes]
+    decompress: Callable[[bytes], bytes]
+
+
+def _zstd_available() -> bool:
+    try:
+        import zstandard  # noqa: F401
+        return True
+    except ImportError:
+        return False
+
+
+def _zstd_compress(data: bytes) -> bytes:
+    import zstandard
+
+    return zstandard.ZstdCompressor(level=3).compress(data)
+
+
+def _zstd_decompress(data: bytes) -> bytes:
+    import zstandard
+
+    return zstandard.ZstdDecompressor().decompress(data)
+
+
+def _zlib_compress(data: bytes) -> bytes:
+    import zlib
+
+    return zlib.compress(data, 6)
+
+
+def _zlib_decompress(data: bytes) -> bytes:
+    import zlib
+
+    return zlib.decompress(data)
+
+
+#: priority order for auto-selection: zstd (fastest/best, optional wheel) →
+#: zlib (stdlib, always present) → raw (no compression, last resort).
+CHECKPOINT_CODECS: tuple[CheckpointCodec, ...] = (
+    CheckpointCodec("zstd", 2, _zstd_available, _zstd_compress, _zstd_decompress),
+    CheckpointCodec("zlib", 1, lambda: True, _zlib_compress, _zlib_decompress),
+    CheckpointCodec("raw", 0, lambda: True, lambda b: b, lambda b: b),
+)
+
+_BY_NAME = {c.name: c for c in CHECKPOINT_CODECS}
+_BY_BYTE = {c.fmt_byte: c for c in CHECKPOINT_CODECS}
+
+
+def get_codec(name: str) -> CheckpointCodec:
+    """Codec by name; raises with the availability story if unusable."""
+    if name not in _BY_NAME:
+        raise KeyError(f"unknown checkpoint codec {name!r}; "
+                       f"registered: {sorted(_BY_NAME)}")
+    codec = _BY_NAME[name]
+    if not codec.available():
+        raise RuntimeError(
+            f"checkpoint codec {name!r} is registered but unavailable in this "
+            f"environment (optional dependency not installed)")
+    return codec
+
+
+def codec_for_byte(fmt_byte: int) -> CheckpointCodec:
+    """Codec recorded in a checkpoint header (for the read path)."""
+    if fmt_byte not in _BY_BYTE:
+        raise ValueError(f"unknown checkpoint codec byte {fmt_byte}; "
+                         f"registered: {sorted(_BY_BYTE)}")
+    codec = _BY_BYTE[fmt_byte]
+    if not codec.available():
+        raise RuntimeError(
+            f"checkpoint was written with codec {codec.name!r}, which is not "
+            f"available here — install the optional dependency to restore it")
+    return codec
+
+
+def best_codec(preferred: Optional[str] = None) -> CheckpointCodec:
+    """Auto-select by availability (zstd → zlib → raw), or force by name."""
+    if preferred is not None:
+        return get_codec(preferred)
+    for codec in CHECKPOINT_CODECS:
+        if codec.available():
+            return codec
+    raise RuntimeError("no checkpoint codec available")  # raw is always there
 
 
 class Compressed(NamedTuple):

@@ -14,8 +14,9 @@ from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro import compat
+from repro.compat import Mesh, NamedSharding, P
 from repro.core.strategy import ExecutionPlan
 from repro.parallel import sharding as shd
 from repro.parallel.axes import axis_rules
@@ -86,10 +87,10 @@ class ServingEngine:
 
     def jit_decode_step(self, donate: bool = True):
         if self.mesh is None:
-            return jax.jit(self.decode_step, donate_argnums=(2,) if donate else ())
+            return compat.jit(self.decode_step, donate_argnums=(2,) if donate else ())
         bspec = NamedSharding(
             self.mesh, shd.batch_spec(self.plan, self.batch or None, self.mesh))
-        return jax.jit(
+        return compat.jit(
             self.decode_step,
             in_shardings=(self._sh(self.param_specs), bspec,
                           self._sh(self.cache_specs), None, None),
@@ -98,10 +99,10 @@ class ServingEngine:
 
     def jit_prefill_step(self):
         if self.mesh is None:
-            return jax.jit(self.prefill_step)
+            return compat.jit(self.prefill_step)
         bspec = NamedSharding(
             self.mesh, shd.batch_spec(self.plan, self.batch or None, self.mesh))
-        return jax.jit(
+        return compat.jit(
             self.prefill_step,
             in_shardings=(self._sh(self.param_specs), bspec, None),
         )

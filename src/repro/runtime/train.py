@@ -20,8 +20,9 @@ from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro import compat
+from repro.compat import Mesh, NamedSharding, P
 from repro.configs.registry import ModelConfig
 from repro.core.strategy import ExecutionPlan, LayerStrategy
 from repro.parallel import sharding as shd
@@ -220,13 +221,13 @@ class HybridParallelModel:
     def jit_train_step(self, donate: bool = True):
         """jit with explicit in/out shardings (None mesh -> plain jit)."""
         if self.mesh is None:
-            return jax.jit(self.train_step, donate_argnums=(0, 1) if donate else ())
+            return compat.jit(self.train_step, donate_argnums=(0, 1) if donate else ())
         ps = self.shardings(self.param_specs)
         os_ = opt_lib.AdamWState(
             step=NamedSharding(self.mesh, P()),
             m=self.shardings(self.opt_specs),
             v=self.shardings(self.opt_specs))
-        return jax.jit(
+        return compat.jit(
             self.train_step,
             in_shardings=(ps, os_, None),
             donate_argnums=(0, 1) if donate else (),

@@ -13,8 +13,9 @@ from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro import compat
+from repro.compat import Mesh, NamedSharding, P
 from repro.core.strategy import ExecutionPlan
 from repro.parallel import sharding as shd
 from repro.parallel.axes import axis_rules
@@ -146,8 +147,8 @@ class PipelineTrainer:
         os_ = opt_lib.AdamWState(
             step=NamedSharding(self.mesh, P()),
             m=self.shardings(self.opt_specs), v=self.shardings(self.opt_specs))
-        return jax.jit(self.train_step, in_shardings=(ps, os_, None),
-                       donate_argnums=(0, 1) if donate else ())
+        return compat.jit(self.train_step, in_shardings=(ps, os_, None),
+                          donate_argnums=(0, 1) if donate else ())
 
 
 def _uniform(plan: ExecutionPlan) -> ExecutionPlan:

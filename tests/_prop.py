@@ -1,0 +1,122 @@
+"""Property-test shim: re-export hypothesis, or a fixed-corpus fallback.
+
+The hermetic test environment has no network, so ``hypothesis`` may be
+missing.  The property-test modules import ``given/settings/st`` from here;
+with hypothesis installed they run as real property tests, without it they
+degrade to deterministic example-based tests: each strategy yields a fixed,
+seeded corpus (boundary values first, then pseudo-random draws), and
+``given`` runs the test body once per drawn example.
+
+Only the strategy surface the suite actually uses is implemented
+(``st.integers``, ``st.sampled_from``, plus a few obvious neighbours) —
+extend ``_Strategy`` subclasses as tests grow.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    import functools
+    import inspect
+    import random
+    import types
+
+    _FALLBACK_MAX_EXAMPLES = 10      # cap: example mode trades coverage for time
+    _SEED = 0xC0FFEE
+
+    class _Strategy:
+        def draw(self, rng: random.Random, i: int):
+            raise NotImplementedError
+
+    class _Integers(_Strategy):
+        def __init__(self, min_value, max_value):
+            self.lo, self.hi = int(min_value), int(max_value)
+
+        def draw(self, rng, i):
+            corpus = (self.lo, self.hi, (self.lo + self.hi) // 2)
+            if i < len(corpus):
+                return corpus[i]
+            return rng.randint(self.lo, self.hi)
+
+    class _SampledFrom(_Strategy):
+        def __init__(self, elements):
+            self.elements = list(elements)
+
+        def draw(self, rng, i):
+            if i < len(self.elements):
+                return self.elements[i]
+            return rng.choice(self.elements)
+
+    class _Booleans(_Strategy):
+        def draw(self, rng, i):
+            return (False, True)[i % 2]
+
+    class _Floats(_Strategy):
+        def __init__(self, min_value=0.0, max_value=1.0, **_kw):
+            self.lo, self.hi = float(min_value), float(max_value)
+
+        def draw(self, rng, i):
+            corpus = (self.lo, self.hi, 0.5 * (self.lo + self.hi))
+            if i < len(corpus):
+                return corpus[i]
+            return rng.uniform(self.lo, self.hi)
+
+    class _Tuples(_Strategy):
+        def __init__(self, *parts):
+            self.parts = parts
+
+        def draw(self, rng, i):
+            return tuple(p.draw(rng, i) for p in self.parts)
+
+    class _Just(_Strategy):
+        def __init__(self, value):
+            self.value = value
+
+        def draw(self, rng, i):
+            return self.value
+
+    st = types.SimpleNamespace(
+        integers=lambda min_value, max_value: _Integers(min_value, max_value),
+        sampled_from=_SampledFrom,
+        booleans=_Booleans,
+        floats=_Floats,
+        tuples=_Tuples,
+        just=_Just,
+    )
+
+    def settings(*, max_examples: int = _FALLBACK_MAX_EXAMPLES, **_ignored):
+        """Accepts (and mostly ignores) hypothesis settings kwargs."""
+
+        def deco(fn):
+            fn._prop_max_examples = min(max_examples, _FALLBACK_MAX_EXAMPLES)
+            return fn
+
+        return deco
+
+    def given(**strats):
+        for name, s in strats.items():
+            if not isinstance(s, _Strategy):
+                raise TypeError(f"unsupported strategy for {name!r}: {s!r} "
+                                "(extend tests/_prop.py)")
+
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                n = getattr(wrapper, "_prop_max_examples", _FALLBACK_MAX_EXAMPLES)
+                rng = random.Random(_SEED)
+                for i in range(n):
+                    drawn = {k: s.draw(rng, i) for k, s in strats.items()}
+                    fn(*args, **drawn, **kwargs)
+
+            # hide the strategy-drawn params from pytest's fixture resolver,
+            # exactly as hypothesis' @given does
+            sig = inspect.signature(fn)
+            params = [p for name, p in sig.parameters.items() if name not in strats]
+            wrapper.__signature__ = sig.replace(parameters=params)
+            return wrapper
+
+        return deco

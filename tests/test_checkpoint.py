@@ -82,3 +82,74 @@ def test_surviving_mesh_shapes():
     assert surviving_mesh(256) == ((16, 16), ("data", "model"))
     assert surviving_mesh(192) == ((8, 16), ("data", "model"))
     assert surviving_mesh(8, model_axis=16) == ((1, 8), ("data", "model"))
+
+
+# ------------------------------------------------------------ codec registry
+
+def _tiny_payload():
+    return {"params/w": {"dtype": "float32", "shape": [2, 2],
+                         "data": np.arange(4, dtype=np.float32).tobytes()}}
+
+
+def test_codec_auto_selection_prefers_available():
+    from repro.runtime import compression as comp
+
+    codec = comp.best_codec()
+    if comp._zstd_available():
+        assert codec.name == "zstd"
+    else:
+        assert codec.name == "zlib"   # stdlib fallback, never raw
+
+
+def test_blob_roundtrip_every_available_codec():
+    from repro.runtime import compression as comp
+
+    payload = _tiny_payload()
+    for codec in comp.CHECKPOINT_CODECS:
+        if not codec.available():
+            continue
+        blob = ckpt.encode_blob(payload, codec=codec.name)
+        assert blob[:4] == ckpt.MAGIC
+        assert blob[5] == codec.fmt_byte
+        back = ckpt.decode_blob(blob)
+        assert back["params/w"]["dtype"] == "float32"
+        assert bytes(back["params/w"]["data"]) == payload["params/w"]["data"]
+
+
+def test_blob_header_records_codec_byte_for_cross_env_restore(monkeypatch):
+    """A zlib-written file must restore even where zstd IS available (the
+    header byte, not the environment, picks the decompressor) — and the
+    auto-selected writer must degrade to zlib when zstd is missing."""
+    from repro.runtime import compression as comp
+
+    blob = ckpt.encode_blob(_tiny_payload(), codec="zlib")
+    assert blob[5] == comp.get_codec("zlib").fmt_byte
+    assert ckpt.decode_blob(blob)["params/w"]["shape"] == [2, 2]
+
+    monkeypatch.setitem(comp._BY_NAME, "zstd", comp.CheckpointCodec(
+        "zstd", 2, lambda: False, comp._zstd_compress, comp._zstd_decompress))
+    monkeypatch.setattr(comp, "CHECKPOINT_CODECS", tuple(
+        comp._BY_NAME[n] for n in ("zstd", "zlib", "raw")))
+    assert comp.best_codec().name == "zlib"
+
+
+def test_unknown_codec_errors():
+    import pytest
+
+    from repro.runtime import compression as comp
+
+    with pytest.raises(KeyError):
+        comp.get_codec("lz4")
+    with pytest.raises(ValueError):
+        comp.codec_for_byte(250)
+
+
+def test_save_restore_roundtrip_with_explicit_codec(tmp_path, rng):
+    cfg, model, plan, hp = _setup(rng)
+    params = hp.ungroup(hp.init_params(rng))
+    ckpt.save(tmp_path, 3, params, None, plan, codec="raw")
+    blob = (tmp_path / "step000000003.ckpt").read_bytes()
+    assert blob[:4] == ckpt.MAGIC and blob[5] == 0       # raw format byte
+    out = ckpt.restore(tmp_path, params_like=params)
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(out["params"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

@@ -1,0 +1,180 @@
+"""Compat shim: old-JAX vs new-JAX paths of lc(), shard_map manual-axis
+bookkeeping, jit flag filtering, mesh factories — simulated on a 1-device
+mesh so both code paths run regardless of the installed JAX."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import compat
+from repro.compat import P
+from repro.parallel.axes import MeshRules, axis_rules, lc
+
+
+def _mesh():
+    return compat.make_mesh((1,), ("model",))
+
+
+def _lc_once(mesh, monkeypatch):
+    """Run lc once, recording the NamedSharding it builds (the compiled
+    output sharding normalizes to replicated on a 1-device mesh, so the
+    constraint must be captured at trace time)."""
+    import repro.parallel.axes as axes_mod
+
+    built = []
+    real = compat.NamedSharding
+
+    def recorder(m, spec):
+        s = real(m, spec)
+        built.append(s)
+        return s
+
+    monkeypatch.setattr(axes_mod, "NamedSharding", recorder)
+    rules = MeshRules(rules={"embed": "model"}, mesh=mesh)
+    with axis_rules(rules):
+        out = jax.jit(lambda x: lc(x, "batch", "embed"))(jnp.ones((2, 4)))
+    monkeypatch.setattr(axes_mod, "NamedSharding", real)
+    return out, built
+
+
+class _EmptyCtx:
+    empty = True
+    axis_names = ()
+    axis_types = ()
+
+
+class _FakeAxisType:
+    Manual = "manual"
+    Auto = "auto"
+
+
+def _simulate_new_jax(monkeypatch, ctx):
+    """Pretend the abstract-mesh API exists and returns ``ctx``."""
+    monkeypatch.setattr(compat, "HAS_ABSTRACT_MESH_API", True)
+    monkeypatch.setattr(jax.sharding, "get_abstract_mesh", lambda: ctx,
+                        raising=False)
+    monkeypatch.setattr(jax.sharding, "AxisType", _FakeAxisType, raising=False)
+
+
+def _simulate_old_jax(monkeypatch):
+    """Pretend the abstract-mesh API does not exist."""
+    monkeypatch.setattr(compat, "HAS_ABSTRACT_MESH_API", False)
+
+
+# ------------------------------------------------------------ lc() paths
+
+def test_lc_noop_outside_rules():
+    x = jnp.ones((2, 4))
+    np.testing.assert_array_equal(np.asarray(lc(x, "batch", "embed")), np.asarray(x))
+
+
+def test_lc_old_and_new_path_identical_shardings(monkeypatch):
+    """Old JAX (no abstract-mesh API) and new JAX (empty abstract-mesh
+    context) must constrain onto the same concrete-mesh sharding."""
+    mesh = _mesh()
+    _simulate_old_jax(monkeypatch)
+    old, old_built = _lc_once(mesh, monkeypatch)
+    _simulate_new_jax(monkeypatch, _EmptyCtx())
+    new, new_built = _lc_once(mesh, monkeypatch)
+    assert [s.spec for s in old_built] == [s.spec for s in new_built] \
+        == [P(None, "model")]
+    assert old_built[0].mesh == new_built[0].mesh
+    np.testing.assert_array_equal(np.asarray(old), np.asarray(new))
+
+
+def test_lc_new_path_manual_axis_dropped(monkeypatch):
+    """New-JAX path: a Manual-typed mesh axis in the abstract-mesh context
+    must be dropped from the rules (shard_map already applied it)."""
+    mesh = _mesh()
+
+    class _ManualCtx:
+        empty = False
+        axis_names = ("model",)
+        axis_types = (_FakeAxisType.Manual,)
+
+    _simulate_new_jax(monkeypatch, _ManualCtx())
+    out, built = _lc_once(mesh, monkeypatch)
+    # every rule target was manual -> spec is empty -> lc must degrade to a
+    # no-op instead of raising or constraining on the dead axis
+    assert built == []
+    np.testing.assert_array_equal(np.asarray(out), np.ones((2, 4)))
+
+
+def test_lc_old_path_manual_axis_dropped(monkeypatch):
+    """Old-JAX path: the manual set comes from compat's own shard_map
+    bookkeeping and must filter identically."""
+    mesh = _mesh()
+    _simulate_old_jax(monkeypatch)
+    with compat._manual_axes_ctx(frozenset({"model"})):
+        assert compat.tracked_manual_axes() == frozenset({"model"})
+        out, built = _lc_once(mesh, monkeypatch)
+    assert compat.tracked_manual_axes() == frozenset()
+    assert built == []
+    np.testing.assert_array_equal(np.asarray(out), np.ones((2, 4)))
+
+
+# ------------------------------------------------------------ shard_map
+
+def test_shard_map_reports_manual_axes_inside_body():
+    """current_mesh_context must see the manual axis while the body traces —
+    the invariant lc() relies on, on every JAX release."""
+    mesh = compat.make_mesh((1,), ("x",))
+    seen = {}
+
+    def body(a):
+        _, manual = compat.current_mesh_context(mesh)
+        seen["manual"] = manual
+        return jax.lax.psum(a, "x")
+
+    out = compat.shard_map(body, mesh=mesh, in_specs=P("x"), out_specs=P(),
+                           axis_names={"x"}, check_vma=False)(jnp.arange(4.0))
+    assert seen["manual"] == frozenset({"x"})
+    np.testing.assert_array_equal(np.asarray(out), np.arange(4.0))
+    # and the bookkeeping must not leak past the call
+    _, manual = compat.current_mesh_context(mesh)
+    assert "x" not in manual
+
+
+def test_shard_map_default_axis_names_fully_manual():
+    """axis_names=None means manual over every mesh axis on both lowerings."""
+    mesh = compat.make_mesh((1,), ("x",))
+    seen = {}
+
+    def body(a):
+        _, manual = compat.current_mesh_context(mesh)
+        seen["manual"] = manual
+        return a * 2
+
+    out = compat.shard_map(body, mesh=mesh, in_specs=P("x"), out_specs=P("x"),
+                           check_vma=False)(jnp.ones((4,)))
+    assert seen["manual"] == frozenset({"x"})
+    np.testing.assert_array_equal(np.asarray(out), 2 * np.ones((4,)))
+
+
+# ------------------------------------------------------------ jit / mesh
+
+def test_jit_drops_unknown_flags_and_none_shardings():
+    f = compat.jit(lambda x: x + 1, in_shardings=None,
+                   some_flag_no_jax_release_has=True)
+    assert float(f(jnp.float32(1.0))) == 2.0
+
+
+def test_jit_keeps_real_flags():
+    f = compat.jit(lambda x, y: x + y, donate_argnums=(1,))
+    assert float(f(jnp.float32(1.0), jnp.float32(2.0))) == 3.0
+
+
+def test_make_mesh_and_abstract_mesh_agree():
+    m = compat.make_mesh((1,), ("data",))
+    assert tuple(m.axis_names) == ("data",)
+    am = compat.abstract_mesh((4, 2), ("data", "model"))
+    assert tuple(am.axis_names) == ("data", "model")
+    assert am.shape["data"] == 4 and am.shape["model"] == 2
+
+
+def test_version_probes_are_consistent():
+    assert len(compat.JAX_VERSION) == 3
+    if compat.HAS_TOPLEVEL_SHARD_MAP:
+        assert hasattr(jax, "shard_map")
+    else:
+        from jax.experimental.shard_map import shard_map  # noqa: F401

@@ -2,7 +2,7 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from tests._prop import given, settings, st
 
 from repro.runtime.compression import (dequantize, ef_compress, ef_init,
                                        quantize)

@@ -1,7 +1,7 @@
 """Cost/memory model invariants + profiler exactness against real models."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from tests._prop import given, settings, st
 
 from repro.configs.registry import ARCH_IDS, get_config
 from repro.core import cost_model as cm

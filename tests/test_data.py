@@ -1,7 +1,7 @@
 """Data pipeline determinism — the property behind straggler tolerance and
 elastic restart: host layout never changes the global batch."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from tests._prop import given, settings, st
 
 from repro.configs.registry import get_config
 from repro.runtime.data import SyntheticDataset

@@ -2,7 +2,7 @@
 plan feasibility for every assigned arch, cluster differentiation."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from tests._prop import given, settings, st
 
 from repro.configs.registry import ARCH_IDS, get_config
 from repro.core.cluster import A100_NODE8, RTX4090_NODE8, TPU_V5E_POD

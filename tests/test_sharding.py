@@ -3,8 +3,10 @@ divisibility guarantees, conflict resolution, kv/vocab fallbacks."""
 import jax
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
-from jax.sharding import AbstractMesh, PartitionSpec as P
+from tests._prop import given, settings, st
+from jax.sharding import PartitionSpec as P
+
+from repro.compat import abstract_mesh
 
 from repro.configs.registry import ARCH_IDS, get_config
 from repro.core.strategy import ExecutionPlan, LayerStrategy
@@ -13,8 +15,8 @@ from repro.models.common import ParamDef
 from repro.parallel import sharding as shd
 from repro.parallel.axes import MeshRules
 
-MESH = AbstractMesh((16, 16), ("data", "model"))
-MESH_MP = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+MESH = abstract_mesh((16, 16), ("data", "model"))
+MESH_MP = abstract_mesh((2, 16, 16), ("pod", "data", "model"))
 
 
 def _plan(strat, mesh=MESH, pp=1, layers=4):
