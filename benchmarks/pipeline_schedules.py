@@ -1,0 +1,105 @@
+"""Pipeline-schedule comparison: modeled bubble fraction, in-flight
+activation memory and p2p cost for gpipe / 1f1b / interleaved across a
+(pp × grad_accum) grid, plus a ``--check`` smoke mode for CI that asserts the
+search engine prefers 1F1B over GPipe on a memory-bound synthetic cluster
+(the honest-accounting regression this subsystem exists to prevent).
+
+Usage:
+  PYTHONPATH=src python benchmarks/pipeline_schedules.py           # table
+  PYTHONPATH=src python benchmarks/pipeline_schedules.py --check   # CI smoke
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+from repro.configs.registry import get_config
+from repro.core import cost_model as cm
+from repro.core import memory_model as mm
+from repro.core.cluster import TPU_V5E_POD
+from repro.core.dynamic_programming import schedule_space
+from repro.core.profiler_model import profile_model
+from repro.core.strategy import LayerStrategy
+
+
+def run(arch: str = "llama3.2-1b", seq_len: int = 4096,
+        global_batch: int = 256) -> list[dict]:
+    cfg = get_config(arch)
+    profile = profile_model(cfg, seq_len)
+    lp = profile.layers[0]
+    strat = LayerStrategy()
+    rows = []
+    for pp in (2, 4, 8):
+        for ga in (g for g in (4, 8, 16, 32) if g >= pp):
+            t_micro = 0.050                    # nominal per-microbatch stage time
+            for sched, v in schedule_space(pp, ga, cfg.num_layers):
+                env = cm.CostEnv(cluster=TPU_V5E_POD, devices=256 // pp, pp=pp,
+                                 micro_batch=global_batch // ga, grad_accum=ga,
+                                 pp_schedule=sched, pp_interleave=v)
+                M = env.microbatches()
+                bubble = (pp - 1) * t_micro / (v if sched == "interleaved" else 1)
+                busy = M * t_micro
+                rows.append({
+                    "pp": pp, "ga": ga, "schedule": sched, "v": v,
+                    "inflight": env.pp_inflight(),
+                    "act_gb_per_layer": mm.layer_act_bytes(lp, strat, env) / 1e9,
+                    "bubble_frac": bubble / (bubble + busy),
+                    "extras_s": cm.pipeline_extras(profile, env, t_micro, strat),
+                })
+    return rows
+
+
+def check(verbose: bool = True) -> dict:
+    """CI smoke (also driven by tests/test_pipeline_schedules.py): a
+    memory-bound cluster must push the search off GPipe.
+
+    Self-calibrating — the memory cap is placed between the most frugal
+    GPipe plan and the most frugal 1F1B plan, so the assertion tracks the
+    model rather than hard-coded byte counts.  Returns the calibration
+    artifacts so callers can make further assertions."""
+    from repro.core.search import SearchEngine, evaluate_uniform
+
+    cfg = dataclasses.replace(get_config("llama3.2-1b").reduced(), num_layers=4)
+    frugal = LayerStrategy(zero=3, remat="full")
+    kw = dict(pp=4, grad_accum=32)
+    _, m_gpipe, _ = evaluate_uniform(cfg, TPU_V5E_POD, 2048, 256, 8, frugal,
+                                     pp_schedule="gpipe", **kw)
+    _, m_1f1b, _ = evaluate_uniform(cfg, TPU_V5E_POD, 2048, 256, 8, frugal,
+                                    pp_schedule="1f1b", **kw)
+    assert m_gpipe > m_1f1b, (m_gpipe, m_1f1b)
+    cap = (m_gpipe + m_1f1b) / 2.0
+    tight = dataclasses.replace(TPU_V5E_POD, chips=8, hbm_bytes=cap)
+    search_kw = dict(mesh_shape=(4, 2, 1), mesh_axes=("pod", "data", "model"),
+                     pp_options=[4], grad_accum_options=[32])
+    only_gpipe = SearchEngine(cfg, tight).search(
+        2048, 256, pp_schedule_options=[("gpipe", 1)], **search_kw)
+    assert not only_gpipe.feasible, "gpipe should exceed the memory cap"
+    best = SearchEngine(cfg, tight).search(2048, 256, **search_kw)
+    assert best.feasible and best.plan.pp_schedule == "1f1b", (
+        best.feasible, best.plan.pp_schedule)
+    if verbose:
+        print(f"OK: search prefers 1f1b under a {cap/1e9:.3f} GB cap "
+              f"(gpipe floor {m_gpipe/1e9:.3f} GB, 1f1b floor {m_1f1b/1e9:.3f} GB)")
+    return {"m_gpipe": m_gpipe, "m_1f1b": m_1f1b, "cap": cap,
+            "only_gpipe": only_gpipe, "best": best}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--check", action="store_true",
+                    help="CI smoke: assert the search prefers 1f1b when "
+                         "memory-bound")
+    ap.add_argument("--arch", default="llama3.2-1b")
+    args = ap.parse_args()
+    if args.check:
+        check()
+        return
+    print("pp,ga,schedule,v,inflight,act_gb_per_layer,bubble_frac,extras_s")
+    for r in run(args.arch):
+        print(f"{r['pp']},{r['ga']},{r['schedule']},{r['v']},"
+              f"{r['inflight']:.1f},{r['act_gb_per_layer']:.3f},"
+              f"{r['bubble_frac']:.3f},{r['extras_s']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -13,9 +13,11 @@ from __future__ import annotations
 
 import dataclasses
 import math
+from typing import Optional
 
 from repro.core import profiler_hw as hw
 from repro.core.cluster import ClusterSpec
+from repro.core.dynamic_programming import schedule_windowable
 from repro.core.profiler_model import LayerProfile, ModelProfile
 from repro.core.strategy import LayerStrategy
 
@@ -32,6 +34,8 @@ class CostEnv:
     micro_batch: int              # samples per microbatch (global)
     grad_accum: int               # microbatches per step
     opt_bytes: float = 8.0        # Adam m+v bytes/param (4.0 = bf16 states)
+    pp_schedule: str = "gpipe"    # gpipe | 1f1b | interleaved (strategy.PP_SCHEDULES)
+    pp_interleave: int = 1        # virtual stages per physical stage
 
     def dp(self, strat: LayerStrategy) -> int:
         return max(self.devices // max(strat.tp, 1), 1)
@@ -39,6 +43,32 @@ class CostEnv:
     def local(self, strat: LayerStrategy) -> float:
         """Samples per device per microbatch (dp-sharded batch)."""
         return max(self.micro_batch / self.dp(strat), 1e-9)
+
+    def microbatches(self) -> int:
+        """Microbatches per step; the PP runtime pads up to one per stage."""
+        return max(self.grad_accum, self.pp)
+
+    def pp_inflight(self) -> float:
+        """Peak in-flight microbatch activations per stage for this schedule.
+
+        GPipe runs every forward before any backward, so a stage holds all
+        M = max(grad_accum, pp) microbatches at peak (NOT pp — the historical
+        under-count this field replaces).  1F1B caps warm-up at one microbatch
+        per downstream stage: min(pp, M) — but only when M windows evenly
+        into rounds of pp; otherwise the runtime (train_pp._num_windows)
+        degrades to a single gpipe window and the honest charge is M.
+        Interleaved 1F1B over v virtual stages adds a v-chunk warm-up term:
+        pp·(1 + (v-1)/v), still capped at M."""
+        if self.pp <= 1:
+            return 1.0
+        M = self.microbatches()
+        windowable = schedule_windowable(self.pp, self.grad_accum)
+        if self.pp_schedule == "1f1b" and windowable:
+            return float(min(self.pp, M))
+        if self.pp_schedule == "interleaved" and windowable:
+            v = max(self.pp_interleave, 1)
+            return float(min(M, self.pp * (1.0 + (v - 1.0) / v)))
+        return float(M)                                  # gpipe / unwindowable
 
 
 def _ceil_frac(dim: int, shards: int) -> float:
@@ -139,15 +169,38 @@ def transition_time(prev: LayerStrategy, nxt: LayerStrategy,
     return env.grad_accum * 2.0 * hw.allgather_time(nbytes, n, env.cluster)
 
 
+def pipeline_boundary_bytes(model_profile: ModelProfile, env: CostEnv,
+                            strat: Optional[LayerStrategy] = None) -> float:
+    """Per-device bytes one microbatch moves across a stage boundary.
+
+    The runtime (parallel/pipeline.py) casts the boundary activation to fp32
+    and permutes the whole ``(mb, seq, D)`` block; it is batch-sharded over
+    the DP axes only (D is replicated over the model axis at block
+    boundaries), so the per-device transfer divides by dp — NOT by
+    dp·tp(·pp) as the model once assumed."""
+    dp = env.dp(strat) if strat is not None else env.devices
+    return (model_profile.d_model * model_profile.seq_len
+            * env.micro_batch / dp * 4.0)
+
+
 def pipeline_extras(model_profile: ModelProfile, env: CostEnv,
-                    per_micro_stage_time: float) -> float:
-    """GPipe bubble + inter-stage p2p per step."""
+                    per_micro_stage_time: float,
+                    strat: Optional[LayerStrategy] = None) -> float:
+    """Schedule-dependent pipeline overhead per step: bubble + inter-stage p2p.
+
+    GPipe and 1F1B share the (pp-1)·t_micro bubble (1F1B reorders backward
+    work but fills no extra slots); interleaving v virtual stages divides the
+    bubble by v because each warm-up slot is a 1/v-depth chunk.  p2p charges
+    one fp32 boundary block per stage-boundary hop per microbatch, fwd + bwd;
+    interleaving multiplies hops by v (each microbatch traverses the physical
+    ring v times, including the wrap hop back to stage 0 between passes)."""
     if env.pp <= 1:
         return 0.0
-    bubble = (env.pp - 1) * per_micro_stage_time
-    act_bytes = (model_profile.d_model * model_profile.seq_len
-                 * env.micro_batch / env.devices * 4.0)     # fp32 boundary (runtime)
-    p2p = 2.0 * env.grad_accum * (env.pp - 1) * hw.p2p_time(act_bytes, env.cluster)
+    v = max(env.pp_interleave, 1) if env.pp_schedule == "interleaved" else 1
+    bubble = (env.pp - 1) * per_micro_stage_time / v
+    act_bytes = pipeline_boundary_bytes(model_profile, env, strat)
+    hops = v * (env.pp - 1) + (v - 1)
+    p2p = 2.0 * env.microbatches() * hops * hw.p2p_time(act_bytes, env.cluster)
     return bubble + p2p
 
 

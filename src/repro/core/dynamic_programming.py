@@ -15,6 +15,48 @@ import math
 import numpy as np
 
 
+def schedule_windowable(pp: int, grad_accum: int) -> bool:
+    """True when the step's M = max(grad_accum, pp) microbatches window
+    evenly into rounds of pp — the precondition for the 1F1B/interleaved
+    min(pp, M)-style in-flight bound.  Shared by the search gates
+    (SearchEngine._schedules_for), the memory model (CostEnv.pp_inflight)
+    and the runtime (PipelineTrainer._num_windows) so the three can never
+    drift apart — a search-says-fits / runtime-OOMs split is exactly the
+    bug class this subsystem exists to prevent."""
+    return pp >= 1 and max(grad_accum, pp) % pp == 0
+
+
+def interleave_realizable(num_layers: int, pp: int, interleave: int) -> bool:
+    """True when every stage can hold `interleave` equal non-contiguous layer
+    chunks (stage_stack's (S, v, L/(S·v), ...) layout)."""
+    return interleave >= 2 and num_layers % (pp * interleave) == 0
+
+
+def schedule_space(pp: int, grad_accum: int, num_layers: int,
+                   *, max_interleave: int = 4) -> list:
+    """Realizable (pp_schedule, pp_interleave) pairs for one (pp, ga) combo.
+
+    The DP runs once per pair — schedules change each layer's in-flight
+    activation multiplier (memory_model) and the plan-level bubble/p2p
+    (cost_model.pipeline_extras), so enumerating them here lets the layer DP
+    trade bubble time against activation memory exactly as it already trades
+    remat/ZeRO.  Gates mirror the runtime: 1F1B needs the padded microbatch
+    count M = max(ga, pp) to window evenly into rounds of pp; interleaving v
+    virtual stages needs num_layers divisible by pp·v.
+    """
+    if pp <= 1:
+        return [("gpipe", 1)]
+    out = [("gpipe", 1)]
+    if schedule_windowable(pp, grad_accum):
+        out.append(("1f1b", 1))
+    v = 2
+    while v <= max_interleave:
+        if interleave_realizable(num_layers, pp, v):
+            out.append(("interleaved", v))
+        v *= 2
+    return out
+
+
 @dataclasses.dataclass
 class DPResult:
     feasible: bool

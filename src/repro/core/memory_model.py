@@ -7,8 +7,10 @@ Activations follow the saved-tensor inventory from the model profiler,
 scaled by the local microbatch, divided by TP for the inner (head-/ff-
 sharded) region and by TP for the boundary region only under SP, and reduced
 by the recomputation level.  The pipeline path multiplies activations by the
-number of in-flight microbatches (GPipe).  Shared-weight groups (zamba2's
-shared attention block) count their parameters once.
+schedule's in-flight microbatch count (``CostEnv.pp_inflight``): GPipe holds
+all M = max(grad_accum, pp) microbatches at peak, 1F1B holds min(pp, M),
+interleaved holds a pp·(1+(v-1)/v) warm-up term.  Shared-weight groups
+(zamba2's shared attention block) count their parameters once.
 """
 from __future__ import annotations
 
@@ -51,8 +53,12 @@ def layer_act_bytes(profile: LayerProfile, strat: LayerStrategy, env: CostEnv) -
         inner = profile.act_selective_inner / tp
     else:
         inner = profile.act_inner / tp
-    inflight = env.pp if env.pp > 1 else 1          # GPipe: stage holds M≈pp in flight
-    return samples * (inner + boundary) * inflight
+    # Schedule-aware in-flight count (CostEnv.pp_inflight): GPipe holds every
+    # one of the step's M = max(grad_accum, pp) microbatches at peak — the old
+    # `pp` here under-counted whenever grad_accum > pp and let the search emit
+    # plans that OOM at runtime; 1F1B earns min(pp, M); interleaved pays a
+    # pp·(1+(v-1)/v) warm-up term.
+    return samples * (inner + boundary) * env.pp_inflight()
 
 
 def layer_memory(profile: LayerProfile, strat: LayerStrategy, env: CostEnv,

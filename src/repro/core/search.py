@@ -22,7 +22,8 @@ from repro.core import cost_model as cm
 from repro.core import memory_model as mm
 from repro.core.cluster import ClusterSpec, TPU_V5E_POD
 from repro.core.decision_tree import candidate_strategies, prune_dominated
-from repro.core.dynamic_programming import optimize
+from repro.core.dynamic_programming import (interleave_realizable, optimize,
+                                            schedule_space, schedule_windowable)
 from repro.core.profiler_model import ModelProfile, profile_model
 from repro.core.strategy import ExecutionPlan, LayerStrategy
 
@@ -76,6 +77,7 @@ class SearchEngine:
         mesh_shape: tuple = (16, 16),
         mesh_constrained: bool = True,
         pp_options: Optional[list] = None,
+        pp_schedule_options: Optional[list] = None,   # [(schedule, interleave), ...]
         grad_accum_options: Optional[list] = None,
         n_buckets: int = 1024,
         arch: str = "",
@@ -106,18 +108,22 @@ class SearchEngine:
         for pp in pp_options:
             if pp > 1 and (cfg.num_experts or not getattr_supports(cfg)):
                 continue                      # runtime gate (see train_pp)
+            if pp > 1 and cfg.num_layers % pp != 0:
+                continue                      # stage_stack needs equal stages
             devices = devices_total // pp
             cands = self._union_candidates(devices, mesh_tp, mesh_data)
             if not sp_ok:
                 cands = [c for c in cands if not c.sp]
             for ga in grad_accum_options:
-                evaluated += 1
                 micro = global_batch // ga
-                plan = self._evaluate(profile, cands, devices, pp, ga, micro,
-                                      mesh_axes, mesh_shape, n_buckets,
-                                      arch=arch, shape_name=shape_name)
-                if plan is not None and plan.predicted_step_time < best_time:
-                    best, best_time = plan, plan.predicted_step_time
+                for sched, virt in self._schedules_for(pp, ga, pp_schedule_options):
+                    evaluated += 1
+                    plan = self._evaluate(profile, cands, devices, pp, ga, micro,
+                                          mesh_axes, mesh_shape, n_buckets,
+                                          arch=arch, shape_name=shape_name,
+                                          schedule=sched, interleave=virt)
+                    if plan is not None and plan.predicted_step_time < best_time:
+                        best, best_time = plan, plan.predicted_step_time
 
         dt = time.perf_counter() - t0
         if best is None and self.opt_bytes > 4.0:
@@ -130,6 +136,7 @@ class SearchEngine:
                                total_devices=devices_total, mesh_axes=mesh_axes,
                                mesh_shape=mesh_shape, mesh_constrained=mesh_constrained,
                                pp_options=pp_options,
+                               pp_schedule_options=pp_schedule_options,
                                grad_accum_options=grad_accum_options,
                                n_buckets=n_buckets, arch=arch, shape_name=shape_name)
             if res.feasible:
@@ -148,10 +155,35 @@ class SearchEngine:
             return SearchResult(best, dt, evaluated, feasible=False)
         return SearchResult(best, dt, evaluated, feasible=True)
 
+    # ------------------------------------------------------------ schedules
+    def _schedules_for(self, pp: int, ga: int,
+                       requested: Optional[list]) -> list:
+        """Schedule pairs to cost for one (pp, ga) combo: the full realizable
+        space by default, or the requested subset filtered by the same
+        runtime-realizability gates (schedule_space)."""
+        if requested is None:
+            return schedule_space(pp, ga, self.cfg.num_layers)
+        if pp <= 1:
+            return [("gpipe", 1)]
+        # validate pinned pairs with the runtime gates directly (the default
+        # space only explores power-of-two interleaves, but any v with
+        # num_layers % (pp·v) == 0 is realizable when asked for explicitly)
+        out = []
+        for sched, v in requested:
+            if sched == "gpipe" and v == 1:
+                out.append((sched, v))
+            elif sched == "1f1b" and v == 1 and schedule_windowable(pp, ga):
+                out.append((sched, v))
+            elif (sched == "interleaved"
+                    and interleave_realizable(self.cfg.num_layers, pp, v)):
+                out.append((sched, v))
+        return out
+
     # ------------------------------------------------------------ one combo
     def _evaluate(self, profile: ModelProfile, cands: list, devices: int,
                   pp: int, ga: int, micro: int, mesh_axes, mesh_shape,
-                  n_buckets: int, *, arch: str, shape_name: str):
+                  n_buckets: int, *, arch: str, shape_name: str,
+                  schedule: str = "gpipe", interleave: int = 1):
         cfg = self.cfg
         layers = profile.layers
         L, C = len(layers), len(cands)
@@ -159,7 +191,8 @@ class SearchEngine:
         mems = np.full((L, C), INF)
         env = cm.CostEnv(cluster=self.cluster, devices=devices, pp=pp,
                          micro_batch=micro, grad_accum=ga,
-                         opt_bytes=self.opt_bytes)
+                         opt_bytes=self.opt_bytes,
+                         pp_schedule=schedule, pp_interleave=interleave)
         for ci, s in enumerate(cands):
             dp = devices // s.tp
             if dp * s.tp != devices or s.ep > dp:
@@ -250,11 +283,11 @@ class SearchEngine:
             return None
         step = res.total_time
         per_micro_stage = res.total_time / max(ga, 1) / pp
-        step += cm.pipeline_extras(profile, dataclasses.replace(env_h, pp=pp),
-                                   per_micro_stage)
+        step += cm.pipeline_extras(profile, env_h, per_micro_stage, fixed_choice)
         step += cm.head_time(profile, fixed_choice, env_h)
         return _mk_plan(arch, shape_name, mesh_shape, mesh_axes, profile, self.cfg,
-                        strategies, pp, ga, step, mem_total, default=fixed_choice)
+                        strategies, pp, ga, step, mem_total, default=fixed_choice,
+                        schedule=schedule, interleave=interleave)
 
 
 def getattr_supports(cfg: ModelConfig) -> bool:
@@ -272,6 +305,8 @@ def evaluate_uniform(
     *,
     pp: int = 1,
     grad_accum: int = 1,
+    pp_schedule: str = "gpipe",
+    pp_interleave: int = 1,
     causal_frac: float = 0.5,
 ) -> tuple[float, float, bool]:
     """(step_time, per-device memory, feasible) for one uniform strategy —
@@ -283,7 +318,8 @@ def evaluate_uniform(
     if dp < 1 or dp * strategy.tp != stage_devices or micro % dp != 0:
         return INF, INF, False
     env = cm.CostEnv(cluster=cluster, devices=stage_devices, pp=pp,
-                     micro_batch=micro, grad_accum=grad_accum)
+                     micro_batch=micro, grad_accum=grad_accum,
+                     pp_schedule=pp_schedule, pp_interleave=pp_interleave)
     t = 0.0
     seen: set = set()
     strategies = []
@@ -296,23 +332,26 @@ def evaluate_uniform(
         strategies.append(s)
         t += cm.layer_step_time(lp, s, env)
     t += cm.head_time(profile, strategy, env)
-    t += cm.pipeline_extras(profile, env, t / max(grad_accum, 1) / pp)
+    t += cm.pipeline_extras(profile, env, t / max(grad_accum, 1) / pp, strategy)
     mem = mm.plan_memory(profile, strategies, env)
     return t, mem, mem <= cluster.hbm_bytes
 
 
 def _mk_plan(arch, shape_name, mesh_shape, mesh_axes, profile, cfg,
-             profile_strategies, pp, ga, step, mem, default=None) -> ExecutionPlan:
+             profile_strategies, pp, ga, step, mem, default=None,
+             schedule="gpipe", interleave=1) -> ExecutionPlan:
     runtime_strats = to_runtime_strategies(cfg, profile, profile_strategies)
     if default is None:
         default = max(set(runtime_strats), key=runtime_strats.count)
+    sched_note = f", {schedule}" + (f"x{interleave}" if interleave > 1 else "") \
+        if pp > 1 else ""
     return ExecutionPlan(
         arch=arch or cfg.name, shape=shape_name,
         mesh_axes=tuple(mesh_axes), mesh_shape=tuple(mesh_shape),
-        pp=pp, grad_accum=ga,
+        pp=pp, pp_schedule=schedule, pp_interleave=interleave, grad_accum=ga,
         layer_strategies=runtime_strats, default_strategy=default,
         predicted_step_time=float(step), predicted_memory=float(mem),
-        notes=f"searched: {len(set(runtime_strats))} distinct strategies",
+        notes=f"searched: {len(set(runtime_strats))} distinct strategies{sched_note}",
     )
 
 

@@ -15,6 +15,17 @@ from typing import Optional
 
 REMAT_POLICIES = ("none", "selective", "full")
 
+#: Pipeline schedules the runtime implements (see parallel/pipeline.py).
+#: "gpipe"       — all-forward-then-all-backward; every one of the step's
+#:                 M = max(grad_accum, pp) microbatch activations is live at
+#:                 peak on a stage.
+#: "1f1b"        — one-forward-one-backward steady state; at most min(pp, M)
+#:                 microbatch activations live per stage, same bubble as GPipe.
+#: "interleaved" — 1F1B over pp_interleave virtual stages per physical stage;
+#:                 bubble shrinks by 1/v at the cost of a pp·(1+(v-1)/v)
+#:                 warm-up in-flight term and v× more p2p hops.
+PP_SCHEDULES = ("gpipe", "1f1b", "interleaved")
+
 
 @dataclasses.dataclass(frozen=True, order=True)
 class LayerStrategy:
@@ -70,12 +81,24 @@ class ExecutionPlan:
     mesh_axes: tuple[str, ...]       # e.g. ("pod", "data", "model")
     mesh_shape: tuple[int, ...]
     pp: int = 1                      # pipeline stages (over "pod" when multi-pod)
+    pp_schedule: str = "gpipe"       # gpipe | 1f1b | interleaved (PP_SCHEDULES)
+    pp_interleave: int = 1           # virtual stages per physical stage (>1 => interleaved)
     grad_accum: int = 1              # microbatches per step
     layer_strategies: list[LayerStrategy] = dataclasses.field(default_factory=list)
     default_strategy: LayerStrategy = dataclasses.field(default_factory=LayerStrategy)
     predicted_step_time: float = 0.0   # seconds, from the cost model
     predicted_memory: float = 0.0      # bytes per device, from the memory model
     notes: str = ""
+
+    def __post_init__(self):
+        if self.pp_schedule not in PP_SCHEDULES:
+            raise ValueError(f"bad pp_schedule {self.pp_schedule!r}")
+        if self.pp_interleave < 1:
+            raise ValueError(f"bad pp_interleave {self.pp_interleave}")
+        if self.pp_schedule == "interleaved" and self.pp_interleave < 2:
+            raise ValueError("interleaved schedule requires pp_interleave >= 2")
+        if self.pp_schedule != "interleaved" and self.pp_interleave != 1:
+            raise ValueError("pp_interleave > 1 requires pp_schedule='interleaved'")
 
     # ------------------------------------------------------------ helpers
     @property
@@ -140,10 +163,12 @@ class ExecutionPlan:
 
 def uniform_plan(arch: str, shape: str, mesh_shape, mesh_axes, num_layers: int,
                  strategy: LayerStrategy, *, pp: int = 1, grad_accum: int = 1,
+                 pp_schedule: str = "gpipe", pp_interleave: int = 1,
                  notes: str = "") -> ExecutionPlan:
     return ExecutionPlan(
         arch=arch, shape=shape, mesh_axes=tuple(mesh_axes), mesh_shape=tuple(mesh_shape),
-        pp=pp, grad_accum=grad_accum,
+        pp=pp, pp_schedule=pp_schedule, pp_interleave=pp_interleave,
+        grad_accum=grad_accum,
         layer_strategies=[strategy] * num_layers,
         default_strategy=strategy, notes=notes,
     )

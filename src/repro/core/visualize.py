@@ -28,7 +28,9 @@ def render_plan(
     devices = plan.num_devices // plan.pp
     env = cm.CostEnv(cluster=cluster, devices=devices, pp=plan.pp,
                      micro_batch=global_batch // plan.grad_accum,
-                     grad_accum=plan.grad_accum)
+                     grad_accum=plan.grad_accum,
+                     pp_schedule=plan.pp_schedule,
+                     pp_interleave=plan.pp_interleave)
     lines = [
         f"plan: {plan.arch} × {plan.shape}   mesh {plan.mesh_shape} "
         f"pp={plan.pp} ga={plan.grad_accum}",

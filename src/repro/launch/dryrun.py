@@ -45,16 +45,36 @@ from repro.runtime.train import construct_hybrid_parallel_model
 RESULTS_DIR = pathlib.Path(__file__).resolve().parents[3] / "results" / "dryrun"
 
 
+FAKE_DEVICES = 512                      # matches the XLA_FLAGS override above
+
+
 def _mesh_tag(multi_pod: bool) -> str:
     return "pod2x16x16" if multi_pod else "pod16x16"
 
 
-def _plan_for(cfg, spec, mesh_shape, mesh_axes, arch, shape_id):
+def _pp_mesh(pp: int) -> tuple[tuple, str]:
+    """Staged mesh shape + result tag for a --pp cell (pod axis = stages)."""
+    if FAKE_DEVICES % (pp * 16) != 0 or pp > 32:
+        raise ValueError(f"--pp {pp} does not tile the {FAKE_DEVICES}-device "
+                         f"dry-run host (need pp*16 | {FAKE_DEVICES}, pp <= 32)")
+    shape = (pp, FAKE_DEVICES // (pp * 16), 16)
+    return shape, "pod" + "x".join(map(str, shape))
+
+
+def _plan_for(cfg, spec, mesh_shape, mesh_axes, arch, shape_id,
+              pp: int = 1, pp_schedule: str | None = None,
+              pp_interleave: int = 2):
     if spec.kind == "train":
         eng = SearchEngine(cfg)
+        sched_opts = None
+        if pp > 1 and pp_schedule:
+            v = pp_interleave if pp_schedule == "interleaved" else 1
+            sched_opts = [(pp_schedule, v)]
         res = eng.search(spec.seq_len, spec.global_batch,
                          mesh_shape=mesh_shape, mesh_axes=mesh_axes,
-                         pp_options=[1],  # GSPMD path; PP variant is separate
+                         # pp=1 -> GSPMD path; --pp stages over the pod axis
+                         pp_options=[pp],
+                         pp_schedule_options=sched_opts,
                          arch=arch, shape_name=shape_id)
         return res.plan, {"search_seconds": res.search_seconds,
                           "search_feasible": res.feasible}
@@ -74,7 +94,8 @@ def _summarize_plan(plan) -> dict:
     ss: dict = {}
     for s in plan.layer_strategies:
         ss[s.short()] = ss.get(s.short(), 0) + 1
-    return {"pp": plan.pp, "grad_accum": plan.grad_accum,
+    return {"pp": plan.pp, "pp_schedule": plan.pp_schedule,
+            "pp_interleave": plan.pp_interleave, "grad_accum": plan.grad_accum,
             "strategies": ss, "default": plan.default_strategy.short(),
             "predicted_step_time": plan.predicted_step_time,
             "predicted_memory": plan.predicted_memory,
@@ -85,10 +106,15 @@ def run_cell(arch: str, shape_id: str, *, multi_pod: bool = False,
              skip_unrolled: bool = False, verbose: bool = True,
              custom_mesh: tuple | None = None,
              force_strategy: str | None = None,
-             force_ga: int | None = None) -> dict:
+             force_ga: int | None = None,
+             pp: int = 1, pp_schedule: str | None = None,
+             pp_interleave: int = 2) -> dict:
     cfg = get_config(arch)
     spec = SHAPES[shape_id]
-    if custom_mesh is not None:                      # §Perf: alternative meshes
+    if pp > 1:                                       # staged: pod axis = stages
+        shape, mesh_tag = _pp_mesh(pp)
+        mesh = make_mesh(shape, ("pod", "data", "model"))
+    elif custom_mesh is not None:                    # §Perf: alternative meshes
         mesh = make_mesh(tuple(custom_mesh), ("data", "model"))
         mesh_tag = "x".join(map(str, custom_mesh))
     else:
@@ -108,7 +134,17 @@ def run_cell(arch: str, shape_id: str, *, multi_pod: bool = False,
             print(f"[skip] {arch} × {shape_id}: {why}")
         return out
 
-    plan, search_meta = _plan_for(cfg, spec, mesh_shape, mesh_axes, arch, shape_id)
+    if pp > 1 and spec.kind != "train":
+        raise ValueError(f"--pp applies to train shapes, not {spec.kind}")
+    plan, search_meta = _plan_for(cfg, spec, mesh_shape, mesh_axes, arch, shape_id,
+                                  pp=pp, pp_schedule=pp_schedule,
+                                  pp_interleave=pp_interleave)
+    if pp > 1 and (not search_meta["search_feasible"] or plan.pp != pp):
+        # the search falls back to a pp=1 plan when nothing fits — don't file
+        # a pp=1 measurement under a staged-mesh result tag
+        raise ValueError(
+            f"no feasible pp={pp} plan for {arch}×{shape_id} "
+            f"(schedule={pp_schedule or 'searched'}; fallback pp={plan.pp})")
     if force_strategy is not None:                   # §Perf: pinned variants
         from repro.core.strategy import LayerStrategy
 
@@ -146,7 +182,13 @@ def run_cell(arch: str, shape_id: str, *, multi_pod: bool = False,
             from repro.runtime.optimizer import AdamWConfig
 
             opt_cfg = AdamWConfig(m_dtype=jnp.bfloat16, v_dtype=jnp.bfloat16)
-        hp = construct_hybrid_parallel_model(model, plan, mesh, opt_cfg=opt_cfg)
+        if plan.pp > 1:
+            from repro.runtime.train_pp import PipelineTrainer
+
+            kw = {"opt_cfg": opt_cfg} if opt_cfg is not None else {}
+            hp = PipelineTrainer(model, plan, mesh, **kw)
+        else:
+            hp = construct_hybrid_parallel_model(model, plan, mesh, opt_cfg=opt_cfg)
         args = (hp.abstract_params(), hp.abstract_opt_state(),
                 input_specs(cfg, spec, model))
         lowered = hp.jit_train_step(donate=True).lower(*args)
@@ -184,7 +226,9 @@ def run_cell(arch: str, shape_id: str, *, multi_pod: bool = False,
     out["collectives"] = stats.merged()
 
     # ------------------------------------------------------ unrolled lower
-    if not skip_unrolled:
+    if not skip_unrolled and spec.kind == "train" and plan.pp > 1:
+        out["unrolled"] = {"skipped": "staged (pp>1) runs have no unrolled variant"}
+    elif not skip_unrolled:
         t0 = time.perf_counter()
         try:
             if spec.kind == "train":
@@ -236,6 +280,12 @@ def main():
     ap.add_argument("--force-strategy", default=None,
                     help="uniform LayerStrategy short string, e.g. tp16-sp-z2")
     ap.add_argument("--force-ga", type=int, default=None)
+    ap.add_argument("--pp", type=int, default=1,
+                    help=">1 stages the block stack over a pod axis (PP cell)")
+    ap.add_argument("--pp-schedule", default=None,
+                    choices=["gpipe", "1f1b", "interleaved"],
+                    help="pin the pipeline schedule (default: searched)")
+    ap.add_argument("--pp-interleave", type=int, default=2)
     ap.add_argument("--tag", default="", help="output filename suffix")
     args = ap.parse_args()
 
@@ -247,14 +297,23 @@ def main():
     else:
         assert args.arch and args.shape, "--arch and --shape (or --all)"
         cells = [(args.arch, args.shape)]
-    meshes = [False, True] if (args.both_meshes or (args.all and not args.multipod)) \
-        else [args.multipod]
+    if args.pp > 1:
+        meshes = [False]           # staged cells build their own pod mesh
+    elif args.both_meshes or (args.all and not args.multipod):
+        meshes = [False, True]
+    else:
+        meshes = [args.multipod]
 
     custom = tuple(int(x) for x in args.mesh_shape.split(",")) if args.mesh_shape else None
     failures = 0
     for arch, shape_id in cells:
         for mp in meshes:
-            mtag = "x".join(map(str, custom)) if custom else _mesh_tag(mp)
+            if args.pp > 1:
+                mtag = _pp_mesh(args.pp)[1]
+            elif custom:
+                mtag = "x".join(map(str, custom))
+            else:
+                mtag = _mesh_tag(mp)
             tag = f"{arch}__{shape_id}__{mtag}" + (f"__{args.tag}" if args.tag else "")
             path = outdir / f"{tag}.json"
             print(f"=== {tag} ===", flush=True)
@@ -263,10 +322,12 @@ def main():
                                skip_unrolled=args.skip_unrolled,
                                custom_mesh=custom,
                                force_strategy=args.force_strategy,
-                               force_ga=args.force_ga)
+                               force_ga=args.force_ga,
+                               pp=args.pp, pp_schedule=args.pp_schedule,
+                               pp_interleave=args.pp_interleave)
             except Exception as e:  # noqa: BLE001
                 failures += 1
-                res = {"arch": arch, "shape": shape_id, "mesh": _mesh_tag(mp),
+                res = {"arch": arch, "shape": shape_id, "mesh": mtag,
                        "error": f"{type(e).__name__}: {e}",
                        "traceback": traceback.format_exc()}
                 print(f"[FAIL] {tag}: {e}")

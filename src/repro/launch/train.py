@@ -31,6 +31,7 @@ from repro.runtime import checkpoint as ckpt_lib
 from repro.runtime.data import SyntheticDataset
 from repro.runtime.elastic import ElasticEvent, replan
 from repro.runtime.train import construct_hybrid_parallel_model
+from repro.runtime.train_pp import PipelineTrainer
 
 PRESET_100M = ModelConfig(
     name="llama-100m", family="dense", num_layers=12, d_model=640,
@@ -54,6 +55,13 @@ def main(argv=None):
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--grad-accum", type=int, default=0, help="0 = searched")
+    ap.add_argument("--pp", type=int, default=1,
+                    help="pipeline stages (>1 stages the block stack over a pod axis)")
+    ap.add_argument("--pp-schedule", default="searched",
+                    choices=["searched", "gpipe", "1f1b", "interleaved"],
+                    help="pipeline schedule; 'searched' lets the engine pick")
+    ap.add_argument("--pp-interleave", type=int, default=2,
+                    help="virtual stages per physical stage (interleaved only)")
     ap.add_argument("--remat", default=None, choices=["none", "selective", "full"])
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=50)
@@ -74,6 +82,32 @@ def main(argv=None):
                              layer_strategies=[strat] * cfg.num_layers,
                              default_strategy=strat)
         mesh = None
+    elif args.pp > 1:
+        # staged run: pod axis carries the pipeline, schedule searched or pinned
+        if n_dev % args.pp != 0:
+            raise SystemExit(f"--pp {args.pp} does not divide the "
+                             f"{n_dev} visible devices")
+        stage_dev = n_dev // args.pp
+        shape = (args.pp, stage_dev // 2, 2) if stage_dev % 2 == 0 \
+            else (args.pp, stage_dev, 1)
+        sched_opts = None
+        if args.pp_schedule != "searched":
+            v = args.pp_interleave if args.pp_schedule == "interleaved" else 1
+            sched_opts = [(args.pp_schedule, v)]
+        res = SearchEngine(cfg).search(args.seq, args.batch, mesh_shape=shape,
+                                       mesh_axes=("pod", "data", "model"),
+                                       pp_options=[args.pp],
+                                       pp_schedule_options=sched_opts,
+                                       arch=cfg.name)
+        if not res.feasible or res.plan.pp != args.pp:
+            # the search falls back to a pp=1 max-sharding plan when nothing
+            # fits — don't silently train something other than what was asked
+            raise SystemExit(
+                f"no feasible pp={args.pp} plan for --pp-schedule "
+                f"{args.pp_schedule} ({cfg.num_layers} layers, {n_dev} devices"
+                f"; interleaved needs num_layers % (pp*interleave) == 0)")
+        plan = res.plan
+        mesh = mesh_lib.make_mesh(shape, ("pod", "data", "model"))
     else:
         shape = (n_dev // 2, 2) if n_dev % 2 == 0 else (n_dev, 1)
         res = SearchEngine(cfg).search(args.seq, args.batch, mesh_shape=shape,
@@ -81,10 +115,16 @@ def main(argv=None):
                                        arch=cfg.name)
         plan = res.plan
         mesh = mesh_lib.make_mesh(shape, ("data", "model"))
-    print(f"plan: {plan.default_strategy.short()} ga={plan.grad_accum} "
+    sched = f" pp={plan.pp}/{plan.pp_schedule}" + (
+        f"x{plan.pp_interleave}" if plan.pp_interleave > 1 else "") \
+        if plan.pp > 1 else ""
+    print(f"plan: {plan.default_strategy.short()} ga={plan.grad_accum}{sched} "
           f"groups={len(plan.groups())}")
 
-    hp = construct_hybrid_parallel_model(model, plan, mesh)
+    if plan.pp > 1:
+        hp = PipelineTrainer(model, plan, mesh)
+    else:
+        hp = construct_hybrid_parallel_model(model, plan, mesh)
     params = hp.init_params(jax.random.PRNGKey(0))
     opt = hp.init_opt_state(params)
     n_params = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(params))

@@ -1,4 +1,4 @@
-"""GPipe-schedule pipeline parallelism (two lowerings, one schedule).
+"""Schedule-aware pipeline parallelism (two lowerings, three schedules).
 
 The pipeline ("pod") axis is *manual*: activations move stage→stage with a
 collective permute.  The remaining mesh axes ("data", "model") stay *auto*,
@@ -23,6 +23,26 @@ autodiff reverses the schedule for the backward pass automatically (the
 transpose of a permute is the reverse permute), reproducing GPipe's
 fwd-then-bwd bubble shape.  Idle stages compute on garbage inputs — exactly
 the (S-1)/(M+S-1) bubble the cost model charges for PP.
+
+Schedules (``ExecutionPlan.pp_schedule``), all numerically equivalent:
+
+* **gpipe** — one tick loop over all M microbatches; every microbatch's
+  activations are live when the backward starts (M in flight per stage).
+* **1f1b** — the same tick loop applied to *windows* of S microbatches with
+  gradient accumulation across windows (driven by
+  ``runtime/train_pp.PipelineTrainer``): each window's backward runs before
+  the next window's forward, so at most min(S, M) microbatch activations are
+  live per stage — the 1F1B memory bound.  ``pipeline_forward`` itself sees
+  one window at a time.
+* **interleaved** — each physical stage holds ``v`` non-contiguous layer
+  chunks (``stage_stack(..., interleave=v)`` lays chunk ``j·S + s`` at
+  ``[s, j]``); activations traverse the physical ring v times, one chained
+  tick-loop pass per virtual round, stage s applying chunk ``j·S + s`` in
+  pass j.  This pass-sequential lowering keeps the math and p2p hop count of
+  the interleaved schedule; the 1/v bubble shrink the cost model charges is
+  a property of the target-hardware schedule, where pass j+1's warm-up
+  overlaps pass j's tail (the CPU tick loop, like GPipe's garbage lanes,
+  does not try to reproduce the wall-clock overlap).
 """
 from __future__ import annotations
 
@@ -42,14 +62,34 @@ def pipeline_forward(
     *,
     mesh: Mesh,
     axis: str = "pod",
+    schedule: str = "gpipe",       # gpipe | 1f1b | interleaved
+    num_virtual: int = 1,          # virtual stages per physical stage (interleaved)
 ) -> jnp.ndarray:
-    """Returns (M, mb, seq, D) outputs of the final stage.
+    """Returns (M, mb, seq, D) outputs of the final (virtual) stage.
 
     The stage boundary is kept fp32: the backward pass psums the input
     cotangent over the pipe axis, and a bf16 all-reduce trips an XLA-CPU
     AllReducePromotion crash (and loses precision on real hardware anyway).
     ``stage_fn`` should cast to bf16 internally for compute.
+
+    ``schedule="1f1b"`` runs the same tick loop as gpipe — the 1F1B memory
+    bound comes from the caller feeding one S-microbatch window per call and
+    accumulating gradients across windows (see the module docstring).
+    ``schedule="interleaved"`` expects ``stage_params`` leaves shaped
+    ``(S, num_virtual, Lc, ...)`` from ``stage_stack(..., interleave=v)`` and
+    chains one tick-loop pass per virtual round.
     """
+    if schedule == "interleaved" and num_virtual > 1:
+        h = x_micro
+        for j in range(num_virtual):
+            chunk = jax.tree.map(lambda a, j=j: a[:, j], stage_params)
+            h = _forward_round(chunk, h, stage_fn, mesh=mesh, axis=axis)
+        return h
+    return _forward_round(stage_params, x_micro, stage_fn, mesh=mesh, axis=axis)
+
+
+def _forward_round(stage_params, x_micro, stage_fn, *, mesh, axis):
+    """One full traversal of the physical ring (lowering-dispatched)."""
     if compat.HAS_TOPLEVEL_SHARD_MAP:
         return _forward_shard_map(stage_params, x_micro, stage_fn,
                                   mesh=mesh, axis=axis)
@@ -139,15 +179,29 @@ def _forward_gspmd(stage_params, x_micro, stage_fn, *, mesh, axis):
     return outs
 
 
-def stage_stack(blocks, num_stages: int):
-    """Reshape stacked layer params (L, ...) -> (S, L/S, ...)."""
+def stage_stack(blocks, num_stages: int, interleave: int = 1):
+    """Reshape stacked layer params (L, ...) -> (S, L/S, ...), or with
+    ``interleave=v`` -> (S, v, L/(S·v), ...) where layer chunk ``c = j·S + s``
+    (the Megatron interleaved assignment: stage s holds chunks s, S+s, 2S+s,
+    ...) lands at ``[s, j]``.  Dim 0 stays the pipe axis either way, so the
+    staged sharding specs are interleave-agnostic beyond an extra None."""
     def r(a):
         L = a.shape[0]
-        assert L % num_stages == 0, (L, num_stages)
-        return a.reshape((num_stages, L // num_stages) + a.shape[1:])
+        assert L % (num_stages * interleave) == 0, (L, num_stages, interleave)
+        if interleave == 1:
+            return a.reshape((num_stages, L // num_stages) + a.shape[1:])
+        chunk = L // (num_stages * interleave)
+        b = a.reshape((interleave, num_stages, chunk) + a.shape[1:])
+        return jnp.swapaxes(b, 0, 1)
 
     return jax.tree.map(r, blocks)
 
 
-def unstage_stack(blocks):
-    return jax.tree.map(lambda a: a.reshape((-1,) + a.shape[2:]), blocks)
+def unstage_stack(blocks, interleave: int = 1):
+    def u(a):
+        if interleave == 1:
+            return a.reshape((-1,) + a.shape[2:])
+        b = jnp.swapaxes(a, 0, 1)            # (v, S, Lc, ...) — chunk-major
+        return b.reshape((-1,) + b.shape[3:])
+
+    return jax.tree.map(u, blocks)

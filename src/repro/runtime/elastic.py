@@ -12,11 +12,12 @@ it between steps when it detects membership change.
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Optional
 
 from repro.configs.registry import ModelConfig
 from repro.core.cluster import ClusterSpec, TPU_V5E_POD
-from repro.core.search import SearchEngine
+from repro.core.search import SearchEngine, SearchResult, getattr_supports
 from repro.core.strategy import ExecutionPlan
 
 
@@ -27,17 +28,37 @@ class ElasticEvent:
     reason: str = "node-failure"
 
 
-def surviving_mesh(devices: int, *, model_axis: int = 16) -> tuple[tuple, tuple]:
-    """Largest (data, model) mesh using <= devices with the given model axis.
+def surviving_mesh(devices: int, *, model_axis: int = 16,
+                   pp: int = 1) -> tuple[tuple, tuple]:
+    """Largest mesh using <= devices with the given model axis and pipeline
+    degree (pp > 1 adds a leading "pod" axis carrying the stages).
 
     TPU slices fail in whole hosts; we conservatively drop to the next
     power-of-two data dimension so the mesh stays rectangular."""
-    model_axis = min(model_axis, devices)
-    data = devices // model_axis
+    model_axis = min(model_axis, max(devices // pp, 1))
+    data = devices // (pp * model_axis)
     p = 1
     while p * 2 <= data:
         p *= 2
+    if pp > 1:
+        return (pp, p, model_axis), ("pod", "data", "model")
     return (p, model_axis), ("data", "model")
+
+
+def replan_pp_candidates(cfg: ModelConfig, devices: int, *,
+                         max_pp: int = 8) -> list[int]:
+    """Pipeline degrees a replan may retain: power-of-two stage counts the
+    runtime can realize on the surviving devices (stacked-block family, no
+    experts, layers split evenly, at least one full (data, model) plane per
+    stage)."""
+    out = [1]
+    if cfg.num_experts or not getattr_supports(cfg):
+        return out
+    pp = 2
+    while pp <= max_pp and devices // pp >= 1 and cfg.num_layers % pp == 0:
+        out.append(pp)
+        pp *= 2
+    return out
 
 
 def replan(
@@ -50,12 +71,30 @@ def replan(
     arch: str = "",
     shape_name: str = "",
 ) -> ExecutionPlan:
-    mesh_shape, mesh_axes = surviving_mesh(event.new_devices)
-    engine = SearchEngine(cfg, dataclasses.replace(
-        cluster, chips=int(mesh_shape[0] * mesh_shape[1])))
-    res = engine.search(seq_len, global_batch, mesh_shape=mesh_shape,
-                        mesh_axes=mesh_axes, pp_options=[1],
-                        arch=arch, shape_name=shape_name)
+    """Re-search the full (pp × schedule × strategy) space for the surviving
+    device count and return the fastest feasible plan.
+
+    Historically this pinned ``pp_options=[1]``, so a run that *needed*
+    pipeline parallelism to fit (or was using it when the membership changed)
+    could never get it back after a failure — the replanned "optimal" plan
+    was either infeasible or strictly worse.  Each candidate pp gets its own
+    pod-axis mesh; schedules are enumerated by the engine (schedule_space)."""
+    best: Optional[SearchResult] = None
+    best_pp1: Optional[SearchResult] = None
+    for pp in replan_pp_candidates(cfg, event.new_devices):
+        mesh_shape, mesh_axes = surviving_mesh(event.new_devices, pp=pp)
+        engine = SearchEngine(cfg, dataclasses.replace(
+            cluster, chips=int(math.prod(mesh_shape))))
+        res = engine.search(seq_len, global_batch, mesh_shape=mesh_shape,
+                            mesh_axes=mesh_axes, pp_options=[pp],
+                            arch=arch, shape_name=shape_name)
+        if pp == 1:
+            best_pp1 = res
+        if not res.feasible:
+            continue
+        if best is None or res.plan.predicted_step_time < best.plan.predicted_step_time:
+            best = res
+    res = best if best is not None else best_pp1
     plan = res.plan
     plan.notes += f" | elastic replan: {event.old_devices}->{event.new_devices} ({event.reason})"
     return plan

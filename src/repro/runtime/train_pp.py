@@ -1,10 +1,28 @@
-"""Pipeline-parallel training path (plan.pp > 1).
+"""Pipeline-parallel training path (plan.pp > 1), schedule-aware.
 
 Embedding / lm-head / loss run data-parallel on every stage (replicated over
 the pipe axis — cheap relative to the block stack and charged by the cost
-model); the block stack is staged over the "pod" axis with the GPipe schedule
-in :mod:`repro.parallel.pipeline`.  Supports the stacked-block families
-(dense / vlm / moe / ssm) with a uniform per-stage strategy.
+model); the block stack is staged over the "pod" axis with the schedule from
+``plan.pp_schedule`` driving :mod:`repro.parallel.pipeline`.  Supports the
+stacked-block families (dense / vlm / ssm) with a uniform per-stage strategy.
+
+Schedules:
+
+* **gpipe** — one forward over all M = max(grad_accum, pp) microbatches,
+  one backward; all M microbatch activations are live at the fwd/bwd
+  boundary (what the memory model charges as M in flight).
+* **1f1b** — the M microbatches are windowed into M/S rounds of S; each
+  round runs forward+backward inside a ``lax.scan`` step that carries only
+  the gradient accumulator, so at most S = min(pp, M) microbatch
+  activations are ever live.  Gradients are token-weighted across windows,
+  which makes the result bitwise-equal in exact arithmetic to the gpipe
+  full-batch gradient (each window's loss is its own token-mean; the
+  accumulator re-weights by window token count).
+* **interleaved** — every physical stage holds ``plan.pp_interleave``
+  non-contiguous layer chunks; activations traverse the ring v times.  Uses
+  the same windowed grad loop as 1f1b, so the in-flight bound here is ≤ S —
+  below the pp·(1+(v-1)/v) warm-up the cost model conservatively charges for
+  the overlap-scheduled variant on real hardware.
 """
 from __future__ import annotations
 
@@ -16,10 +34,12 @@ import jax.numpy as jnp
 
 from repro import compat
 from repro.compat import Mesh, NamedSharding, P
+from repro.core.dynamic_programming import (interleave_realizable,
+                                            schedule_windowable)
 from repro.core.strategy import ExecutionPlan
 from repro.parallel import sharding as shd
 from repro.parallel.axes import axis_rules
-from repro.parallel.pipeline import pipeline_forward, stage_stack
+from repro.parallel.pipeline import pipeline_forward, stage_stack, unstage_stack
 from repro.parallel.remat import apply_remat
 from repro.runtime import optimizer as opt_lib
 from repro.runtime.train import softmax_xent
@@ -46,34 +66,55 @@ class PipelineTrainer:
             raise NotImplementedError("pipeline runtime does not support MoE; "
                                       "use the GSPMD path (pod axis -> DP)")
         self.num_stages = self.plan.pp
+        self.schedule = self.plan.pp_schedule
+        self.interleave = self.plan.pp_interleave if self.schedule == "interleaved" else 1
+        L = self.model.cfg.num_layers
+        if self.interleave > 1 and not interleave_realizable(
+                L, self.num_stages, self.interleave):
+            raise ValueError(
+                f"{L} layers do not split into {self.num_stages} stages × "
+                f"{self.interleave} virtual chunks")
+        if L % self.num_stages != 0:
+            raise ValueError(f"{L} layers do not split into "
+                             f"{self.num_stages} stages")
         self.strategy = self.plan.default_strategy
         self._rules = shd.act_rules(self.plan, self.strategy, self.mesh)
         base = shd.param_spec_tree(self.model, _uniform(self.plan), self.mesh, kind="param")
-        self.param_specs = _stage_specs(base, self.pipe_axis)
+        self.param_specs = _stage_specs(base, self.pipe_axis, self.interleave)
         self.grad_specs = _stage_specs(
             shd.param_spec_tree(self.model, _uniform(self.plan), self.mesh, kind="grad"),
-            self.pipe_axis)
+            self.pipe_axis, self.interleave)
         self.opt_specs = _stage_specs(
             shd.param_spec_tree(self.model, _uniform(self.plan), self.mesh, kind="opt"),
-            self.pipe_axis)
+            self.pipe_axis, self.interleave)
 
     # ------------------------------------------------------------ params
     def stage_params(self, params):
         out = dict(params)
-        out["blocks"] = stage_stack(params["blocks"], self.num_stages)
+        out["blocks"] = stage_stack(params["blocks"], self.num_stages,
+                                    self.interleave)
+        return out
+
+    # group/ungroup mirror HybridParallelModel so the checkpoint/driver code
+    # can treat both trainers uniformly (canonical checkpoints are unstaged).
+    def group(self, params):
+        return self.stage_params(params)
+
+    def ungroup(self, params):
+        out = dict(params)
+        out["blocks"] = unstage_stack(params["blocks"], self.interleave)
         return out
 
     def init_params(self, key):
         return self.stage_params(self.model.init(key))
 
     def abstract_params(self):
-        import numpy as np
-
+        # derive staged shapes from stage_stack itself so the abstract tree
+        # can never drift from the real staging layout
         flat = self.model.abstract()
         out = dict(flat)
-        out["blocks"] = jax.tree.map(
-            lambda a: jax.ShapeDtypeStruct(
-                (self.num_stages, a.shape[0] // self.num_stages) + a.shape[1:], a.dtype),
+        out["blocks"] = jax.eval_shape(
+            lambda b: stage_stack(b, self.num_stages, self.interleave),
             flat["blocks"])
         return out
 
@@ -93,18 +134,34 @@ class PipelineTrainer:
             if hasattr(x, "shape") else x, tree, specs)
 
     # ------------------------------------------------------------ loss
-    def loss_fn(self, params, batch):
+    def _num_micro(self) -> int:
+        return max(self.plan.grad_accum, self.num_stages)
+
+    def _num_windows(self) -> int:
+        """Fwd+bwd rounds per step (1 = single full-batch forward/backward).
+
+        Both 1F1B and interleaved window the step into M/S rounds of S
+        microbatches so at most one round's activations are live — the
+        memory bound the cost model charges them for (interleaved's
+        pp·(1+(v-1)/v) warm-up charge is then an upper bound on the ≤S this
+        lowering actually holds).  GPipe, by definition, does not window."""
+        M, S = self._num_micro(), self.num_stages
+        if (self.schedule in ("1f1b", "interleaved") and M > S
+                and schedule_windowable(S, self.plan.grad_accum)):
+            return M // S
+        return 1
+
+    def _forward_loss(self, params, tokens, labels, vis_embeds, n_micro):
+        """Loss over one batch slice run as ``n_micro`` pipeline microbatches."""
         model, cfg = self.model, self.model.cfg
-        tokens, labels = batch["tokens"], batch["labels"]
         B = tokens.shape[0]
-        M = max(self.plan.grad_accum, self.num_stages)
-        mb = B // M
+        mb = B // n_micro
 
         x = emb_lib.embed_tokens(params["embed"], tokens, jnp.bfloat16)
-        if "vis_embeds" in batch:
-            x = jnp.concatenate([batch["vis_embeds"].astype(x.dtype), x], axis=1)
+        if vis_embeds is not None:
+            x = jnp.concatenate([vis_embeds.astype(x.dtype), x], axis=1)
         seq, D = x.shape[1], x.shape[2]
-        x_micro = x.reshape(M, mb, seq, D)
+        x_micro = x.reshape(n_micro, mb, seq, D)
 
         def apply_block(bp, h):
             out = self.model.block_apply(bp, h, mode="train")
@@ -118,7 +175,9 @@ class PipelineTrainer:
             return out
 
         outs = pipeline_forward(params["blocks"], x_micro, stage_fn,
-                                mesh=self.mesh, axis=self.pipe_axis)
+                                mesh=self.mesh, axis=self.pipe_axis,
+                                schedule=self.schedule,
+                                num_virtual=self.interleave)
         h = outs.reshape(B, seq, D)
         h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
         logits = emb_lib.lm_head(params["embed"], h, cfg)
@@ -128,11 +187,65 @@ class PipelineTrainer:
         loss, metrics = softmax_xent(logits, labels)
         return loss, metrics
 
+    def loss_fn(self, params, batch):
+        return self._forward_loss(params, batch["tokens"], batch["labels"],
+                                  batch.get("vis_embeds"), self._num_micro())
+
+    # ------------------------------------------------------------ grads
+    def _loss_and_grads(self, params, batch):
+        W = self._num_windows()
+        if W <= 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                self.loss_fn, has_aux=True)(params, batch)
+            return loss, metrics, grads
+
+        # 1F1B/interleaved: scan over W windows of S microbatches; each scan
+        # step runs the window's forward AND backward, so only that window's
+        # activations are live — at most min(pp, M) microbatches in flight.
+        # Token-weighted accumulation keeps the result equal to the
+        # full-batch gradient.
+        S = self.num_stages
+        B = batch["tokens"].shape[0]
+        Bw = B // W
+
+        def window(x):
+            return x.reshape((W, Bw) + x.shape[1:])
+
+        xs = {k: window(batch[k]) for k in ("tokens", "labels")}
+        if "vis_embeds" in batch:
+            xs["vis_embeds"] = window(batch["vis_embeds"])
+
+        def one_window(p, wb):
+            return self._forward_loss(p, wb["tokens"], wb["labels"],
+                                      wb.get("vis_embeds"), S)
+
+        g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+        def acc(carry, wb):
+            g_sum, l_sum, d_sum = carry
+            (l, mets), g = jax.value_and_grad(one_window, has_aux=True)(params, wb)
+            w = mets["tokens"]
+            g_sum = jax.tree.map(lambda a, b: a + w * b.astype(jnp.float32),
+                                 g_sum, g)
+            g_sum = self._constrain(g_sum, self.grad_specs)
+            return (g_sum, l_sum + w * l, d_sum + w), mets
+
+        (g_sum, l_sum, d_sum), mets_seq = jax.lax.scan(
+            acc, (g0, jnp.float32(0.0), jnp.float32(0.0)), xs)
+        denom = jnp.maximum(d_sum, 1.0)
+        grads = jax.tree.map(lambda g: g / denom, g_sum)
+        # whole-batch metrics, same meaning as the gpipe path: token counts
+        # sum, everything else is a token-weighted mean over the windows
+        toks = mets_seq["tokens"]
+        metrics = {k: (jnp.sum(v) if k == "tokens"
+                       else jnp.sum(v * toks) / denom)
+                   for k, v in mets_seq.items()}
+        return l_sum / denom, metrics, grads
+
     # ------------------------------------------------------------ step
     def train_step(self, params, opt_state, batch):
         with axis_rules(self._rules):
-            (loss, metrics), grads = jax.value_and_grad(
-                self.loss_fn, has_aux=True)(params, batch)
+            loss, metrics, grads = self._loss_and_grads(params, batch)
             grads = self._constrain(grads, self.grad_specs)
             new_params, new_opt, stats = opt_lib.adamw_update(
                 params, grads, opt_state, self.opt_cfg)
@@ -157,14 +270,16 @@ def _uniform(plan: ExecutionPlan) -> ExecutionPlan:
         plan, layer_strategies=[plan.default_strategy] * len(plan.layer_strategies))
 
 
-def _stage_specs(spec_tree: dict, pipe_axis: str) -> dict:
-    """Prepend the pipe-axis sharding to every blocks spec (staged dim0)."""
+def _stage_specs(spec_tree: dict, pipe_axis: str, interleave: int = 1) -> dict:
+    """Prepend the pipe-axis sharding to every blocks spec (staged dim0);
+    interleaved stacks carry an extra unsharded virtual-chunk dim1."""
     out = dict(spec_tree)
+    lead = (None, None) if interleave > 1 else (None,)
 
     def add(s: P) -> P:
         parts = tuple(s)
-        # original dim0 is "layers" (never sharded) -> replace by (pipe, None)
-        return P(pipe_axis, *((None,) + parts[1:] if parts else (None,)))
+        # original dim0 is "layers" (never sharded) -> replace by (pipe, ...)
+        return P(pipe_axis, *(lead + parts[1:] if parts else lead))
 
     out["blocks"] = jax.tree.map(
         lambda s: add(s), spec_tree["blocks"], is_leaf=lambda x: isinstance(x, P))

@@ -12,9 +12,10 @@ from repro.core.strategy import LayerStrategy
 from repro.models.common import count_params
 
 
-def _env(devices=256, micro=256, ga=1, pp=1):
+def _env(devices=256, micro=256, ga=1, pp=1, schedule="gpipe", interleave=1):
     return cm.CostEnv(cluster=TPU_V5E_POD, devices=devices, pp=pp,
-                      micro_batch=micro, grad_accum=ga)
+                      micro_batch=micro, grad_accum=ga,
+                      pp_schedule=schedule, pp_interleave=interleave)
 
 
 # ------------------------------------------------------------ profiler exactness
@@ -89,6 +90,87 @@ def test_memory_monotone_in_remat():
     s = mm.layer_act_bytes(lp, LayerStrategy(remat="selective"), _env())
     f = mm.layer_act_bytes(lp, LayerStrategy(remat="full"), _env())
     assert f < s < n
+
+
+def test_gpipe_inflight_charges_grad_accum_not_pp():
+    """Regression: the GPipe in-flight count is max(grad_accum, pp), not pp.
+    A grad_accum=32, pp=4 stage holds all 32 microbatches at the fwd/bwd
+    boundary — charging 4 under-counted activations 8× and let the search
+    emit plans that OOM at runtime."""
+    prof = profile_model(get_config("llama3.2-1b"), 4096)
+    lp = prof.layers[0]
+    s = LayerStrategy()
+    base = mm.layer_act_bytes(lp, s, _env(micro=32, ga=1, pp=1))   # 1 in flight
+    gpipe = mm.layer_act_bytes(lp, s, _env(micro=32, ga=32, pp=4))
+    onef = mm.layer_act_bytes(lp, s, _env(micro=32, ga=32, pp=4, schedule="1f1b"))
+    assert gpipe == pytest.approx(32 * base, rel=1e-9)     # M, not pp
+    assert onef == pytest.approx(4 * base, rel=1e-9)       # min(pp, M)
+    # acceptance: the gpipe-vs-1f1b delta IS the modeled in-flight delta
+    assert gpipe - onef == pytest.approx((32 - 4) * base, rel=1e-9)
+
+
+def test_pp_schedule_memory_ordering():
+    """1f1b <= interleaved <= gpipe whenever grad_accum > pp."""
+    prof = profile_model(get_config("qwen3-14b"), 4096)
+    lp = prof.layers[0]
+    s = LayerStrategy()
+    g = mm.layer_act_bytes(lp, s, _env(ga=32, pp=4))
+    i = mm.layer_act_bytes(lp, s, _env(ga=32, pp=4, schedule="interleaved",
+                                       interleave=2))
+    f = mm.layer_act_bytes(lp, s, _env(ga=32, pp=4, schedule="1f1b"))
+    assert f < i < g
+    # interleaved warm-up term: pp * (1 + (v-1)/v) = 4 * 1.5 = 6 in flight
+    assert i == pytest.approx(f * 6.0 / 4.0, rel=1e-9)
+
+
+def test_1f1b_inflight_degrades_when_not_windowable():
+    """When M = max(ga, pp) does not window evenly into rounds of pp the
+    runtime falls back to a single gpipe window — the model must charge M,
+    not min(pp, M), for such plans (reachable via evaluate_uniform)."""
+    assert _env(ga=6, pp=4, schedule="1f1b").pp_inflight() == 6.0
+    assert _env(ga=8, pp=4, schedule="1f1b").pp_inflight() == 4.0
+    assert _env(ga=6, pp=4, schedule="interleaved",
+                interleave=2).pp_inflight() == 6.0
+
+
+def test_pipeline_p2p_pins_runtime_transfer_size():
+    """The p2p charge must match what parallel/pipeline.py actually sends:
+    the full per-dp-shard microbatch boundary block in fp32 — divided by dp
+    only, NOT by dp·tp (the model once divided by env.devices = dp·tp,
+    under-counting transfers 16× for tp=16 plans)."""
+    from repro.core import profiler_hw as hw
+
+    prof = profile_model(get_config("llama3.2-1b"), 4096)
+    env = _env(devices=64, micro=64, ga=8, pp=4)
+    strat = LayerStrategy(tp=16)                       # dp = 64/16 = 4
+    nbytes = cm.pipeline_boundary_bytes(prof, env, strat)
+    expected = prof.d_model * prof.seq_len * (64 / 4) * 4.0
+    assert nbytes == pytest.approx(expected, rel=1e-9)
+    # and pipeline_extras uses exactly that block per hop, fwd+bwd, M hops/stage gap
+    extras = cm.pipeline_extras(prof, env, 0.0, strat)
+    M, hops = 8, (4 - 1)
+    assert extras == pytest.approx(
+        2.0 * M * hops * hw.p2p_time(expected, env.cluster), rel=1e-9)
+    # tp=1 keeps the old divisor (dp == devices)
+    assert cm.pipeline_boundary_bytes(prof, env, LayerStrategy()) == pytest.approx(
+        prof.d_model * prof.seq_len * 4.0, rel=1e-9)
+
+
+def test_pipeline_bubble_shrinks_with_interleaving():
+    """Interleaved over v virtual stages divides the bubble by v; gpipe and
+    1f1b share the same bubble."""
+    prof = profile_model(get_config("llama3.2-1b"), 4096)
+    t_micro = 5.0                      # compute-dominated regime
+    g = cm.pipeline_extras(prof, _env(ga=8, pp=4), t_micro, LayerStrategy())
+    f = cm.pipeline_extras(prof, _env(ga=8, pp=4, schedule="1f1b"), t_micro,
+                           LayerStrategy())
+    i = cm.pipeline_extras(prof, _env(ga=8, pp=4, schedule="interleaved",
+                                      interleave=2), t_micro, LayerStrategy())
+    assert g == f                      # same bubble, same hop count
+    p2p_g = g - (4 - 1) * t_micro
+    p2p_i = i - (4 - 1) * t_micro / 2
+    assert i < g                       # bubble shrink dominates at this t_micro
+    assert p2p_i > p2p_g               # but interleaving pays more p2p hops
 
 
 def test_shared_params_counted_once():
