@@ -1,0 +1,116 @@
+"""Context-parallelism comparison: per-device memory, predicted step time and
+ring-communication cost for cp ∈ {1, 2, 4} on a long-context training shape,
+plus a ``--check`` smoke mode for CI that asserts the search engine reaches
+for cp > 1 once the sequence length pushes every cp=1 plan over the memory
+cap (the scaling wall this subsystem exists to break).
+
+Usage:
+  PYTHONPATH=src python benchmarks/context_parallel.py           # table
+  PYTHONPATH=src python benchmarks/context_parallel.py --check   # CI smoke
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+from repro.configs.registry import get_config
+from repro.core import cost_model as cm
+from repro.core import memory_model as mm
+from repro.core.cluster import TPU_V5E_POD
+from repro.core.profiler_model import profile_model
+from repro.core.search import SearchEngine, evaluate_uniform
+from repro.core.strategy import LayerStrategy
+
+
+def run(arch: str = "llama3.2-1b-long", seq_len: int = 32_768,
+        global_batch: int = 2) -> list[dict]:
+    """Long-context cp sweep with dp pinned at 1 (devices = tp·cp): the
+    regime cp exists for.  When the batch cannot shard any further, adding
+    devices along dp buys nothing — adding them along cp divides the
+    per-device activation footprint by cp at the price of the ring term.
+    (At fixed devices with a shardable batch, cp trades 1:1 against dp and
+    memory is flat — that flat trade is why cp stays OUT of short-context
+    plans.)"""
+    cfg = get_config(arch)
+    profile = profile_model(cfg, seq_len)
+    lp = profile.layers[0]
+    rows = []
+    ga = global_batch            # micro = 1 per step => dp = 1 everywhere
+    for cp in (1, 2, 4):
+        devices = 16 * cp        # tp=16 fast domain, cp scales device count
+        strat = LayerStrategy(tp=16, sp=True, zero=3, remat="selective", cp=cp)
+        t, mem, ok = evaluate_uniform(cfg, TPU_V5E_POD, seq_len, global_batch,
+                                      devices, strat, grad_accum=ga)
+        env = cm.CostEnv(cluster=TPU_V5E_POD, devices=devices, pp=1,
+                         micro_batch=global_batch // ga, grad_accum=ga)
+        rows.append({
+            "cp": cp, "devices": devices,
+            "act_gb_per_layer": mm.layer_act_bytes(lp, strat, env) / 1e9,
+            "ring_ms_per_micro": cm.cp_comm_time(lp, strat, env) * 1e3,
+            "step_s": t, "mem_gb": mem / 1e9, "feasible": ok,
+        })
+    return rows
+
+
+def check(verbose: bool = True) -> dict:
+    """CI smoke (shared with tests/test_context_parallel.py): a long sequence
+    under a tight memory cap must push the search onto a cp>1 ring plan.
+
+    Self-calibrating — the cap is placed between the most frugal cp=1 plan
+    and the most frugal cp=4 plan on an 8-device (cp=4, data=2, model=1)
+    mesh, so the assertion tracks the memory model rather than hard-coded
+    byte counts.  The cp=1 floor is taken at bf16 Adam states too, because
+    the engine retries with bf16 m/v before giving up."""
+    cfg = dataclasses.replace(get_config("llama3.2-1b").reduced(), num_layers=4)
+    seq, batch, devices = 4096, 8, 8
+    frugal = LayerStrategy(zero=3, remat="full")
+    m_cp1 = min(
+        evaluate_uniform(cfg, TPU_V5E_POD, seq, batch, devices, frugal,
+                         grad_accum=1, opt_bytes=ob)[1]
+        for ob in (8.0, 4.0))
+    _, m_cp4, _ = evaluate_uniform(
+        cfg, TPU_V5E_POD, seq, batch, devices,
+        dataclasses.replace(frugal, cp=4), grad_accum=4)
+    assert m_cp1 > 1.05 * m_cp4, (m_cp1, m_cp4)
+    cap = (m_cp1 + m_cp4) / 2.0
+    tight = dataclasses.replace(TPU_V5E_POD, chips=devices, hbm_bytes=cap)
+    # no cp axis on the mesh => the cap is unreachable
+    no_cp = SearchEngine(cfg, tight).search(
+        seq, batch, mesh_shape=(devices, 1), mesh_axes=("data", "model"),
+        pp_options=[1])
+    assert not no_cp.feasible, "cp=1 plans should exceed the memory cap"
+    # cp axis available => the search must pick a ring plan
+    best = SearchEngine(cfg, tight).search(
+        seq, batch, mesh_shape=(4, 2, 1), mesh_axes=("cp", "data", "model"),
+        pp_options=[1])
+    assert best.feasible and best.plan.default_strategy.cp > 1, (
+        best.feasible, best.plan.default_strategy.short())
+    assert best.plan.predicted_memory <= cap
+    if verbose:
+        print(f"OK: search picks cp={best.plan.default_strategy.cp} under a "
+              f"{cap/1e6:.1f} MB cap (cp=1 floor {m_cp1/1e6:.1f} MB, "
+              f"cp=4 floor {m_cp4/1e6:.1f} MB)")
+    return {"m_cp1": m_cp1, "m_cp4": m_cp4, "cap": cap,
+            "no_cp": no_cp, "best": best}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--check", action="store_true",
+                    help="CI smoke: assert the search picks cp>1 when a long "
+                         "sequence is memory-bound")
+    ap.add_argument("--arch", default="llama3.2-1b-long")
+    ap.add_argument("--seq-len", type=int, default=32_768)
+    args = ap.parse_args()
+    if args.check:
+        check()
+        return
+    print("cp,devices,act_gb_per_layer,ring_ms_per_micro,step_s,mem_gb,feasible")
+    for r in run(args.arch, args.seq_len):
+        print(f"{r['cp']},{r['devices']},{r['act_gb_per_layer']:.3f},"
+              f"{r['ring_ms_per_micro']:.3f},{r['step_s']:.3f},"
+              f"{r['mem_gb']:.2f},{r['feasible']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -5,6 +5,8 @@ Prints ``name,us_per_call,derived`` CSV rows per the harness contract.
   search     — strategy-search latency ("within minutes" claim)
   costmodel  — profiler/cost-model fidelity (measured-vs-analytic ranking)
   kernels    — kernel reference microbenches
+  pipeline   — schedule comparison (gpipe/1f1b/interleaved bubble + in-flight)
+  cp         — context-parallel ring-attention memory/step-time sweep
   roofline   — 3-term roofline table from dry-run artifacts (if present)
 """
 from __future__ import annotations
@@ -47,6 +49,31 @@ def main() -> None:
     from benchmarks import kernels_micro
 
     rows.extend(kernels_micro.run())
+
+    # ---- pipeline schedules (PR 2 suite — was never registered here) ---------
+    try:
+        from benchmarks import pipeline_schedules
+
+        for r in pipeline_schedules.run():
+            rows.append((
+                f"pipeline.pp{r['pp']}.ga{r['ga']}.{r['schedule']}"
+                + (f"x{r['v']}" if r['v'] > 1 else ""),
+                r["extras_s"] * 1e6,
+                f"inflight={r['inflight']:.1f}_bubble={r['bubble_frac']:.3f}"))
+    except Exception as e:  # noqa: BLE001
+        rows.append(("pipeline.skipped", 0.0, type(e).__name__))
+
+    # ---- context parallelism -------------------------------------------------
+    try:
+        from benchmarks import context_parallel
+
+        for r in context_parallel.run():
+            rows.append((
+                f"cp.cp{r['cp']}.dev{r['devices']}", r["step_s"] * 1e6,
+                f"mem_gb={r['mem_gb']:.2f}_ring_ms={r['ring_ms_per_micro']:.3f}"
+                f"_feasible={r['feasible']}"))
+    except Exception as e:  # noqa: BLE001
+        rows.append(("cp.skipped", 0.0, type(e).__name__))
 
     # ---- DP ablation (paper's core algorithm vs cheaper selectors) -----------
     try:

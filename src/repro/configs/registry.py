@@ -53,6 +53,9 @@ class ModelConfig:
     # --- vlm ------------------------------------------------------------------
     vis_tokens: int = 0          # stub patch-embedding prefix length
 
+    # --- long context ---------------------------------------------------------
+    long_context: bool = False   # opts into the 32k train shape (train_32k)
+
     source: str = ""             # provenance tag from the assignment table
 
     # ------------------------------------------------------------------
@@ -112,6 +115,7 @@ _ARCH_MODULES = {
     "nemotron-4-15b": "nemotron_4_15b",
     "qwen2.5-3b": "qwen2_5_3b",
     "llama3.2-1b": "llama3_2_1b",
+    "llama3.2-1b-long": "llama3_2_1b_long",
     "internvl2-26b": "internvl2_26b",
     "zamba2-7b": "zamba2_7b",
     "moonshot-v1-16b-a3b": "moonshot_v1_16b_a3b",

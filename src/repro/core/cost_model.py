@@ -38,7 +38,14 @@ class CostEnv:
     pp_interleave: int = 1        # virtual stages per physical stage
 
     def dp(self, strat: LayerStrategy) -> int:
-        return max(self.devices // max(strat.tp, 1), 1)
+        """Batch-sharding degree: cp takes devices out of the DP pool (a cp
+        rank holds a sequence shard, not a batch shard)."""
+        return max(self.devices // max(strat.tp * strat.cp, 1), 1)
+
+    def state_dp(self, strat: LayerStrategy) -> int:
+        """ZeRO/grad-reduction group size: params replicate over cp, so
+        states shard (and grads reduce) over the dp·cp group."""
+        return max(self.dp(strat) * max(strat.cp, 1), 1)
 
     def local(self, strat: LayerStrategy) -> float:
         """Samples per device per microbatch (dp-sharded batch)."""
@@ -85,24 +92,54 @@ def compute_time(profile: LayerProfile, strat: LayerStrategy, env: CostEnv) -> f
         tp = strat.tp
         waste = _ceil_frac(part.shard_dim, tp) if part.shard_dim else 1.0
         fwd += part.flops * waste / tp if part.shard_dim else part.flops
-    fwd *= env.local(strat) / eff
+    # every FLOP part scales with the sequence, so cp shards all of them;
+    # cp | seq is validated (no ceil waste on the seq dim)
+    fwd *= env.local(strat) / eff / max(strat.cp, 1)
     total = fwd * (1.0 + BWD_FLOPS_FACTOR)
     if strat.remat == "full":
         total += fwd
     elif strat.remat == "selective":
-        total += (profile.flops_quadratic / strat.tp) * env.local(strat) / eff
+        total += (profile.flops_quadratic / (strat.tp * max(strat.cp, 1))
+                  ) * env.local(strat) / eff
     return total
 
 
 def tp_comm_time(profile: LayerProfile, strat: LayerStrategy, env: CostEnv) -> float:
-    """Activation all-reduces over the TP group (AG+RS under SP — same volume)."""
+    """Activation all-reduces over the TP group (AG+RS under SP — same volume).
+    Under cp the boundary activations are seq-sharded, so the per-device
+    collective volume divides by cp."""
     if strat.tp <= 1:
         return 0.0
-    nbytes = profile.seq_len * env.local(strat) * _d_model(profile) * 2.0
+    nbytes = (profile.seq_len * env.local(strat) * _d_model(profile) * 2.0
+              / max(strat.cp, 1))
     n_coll = profile.tp_collectives * 2          # fwd + bwd
     if strat.remat == "full":
         n_coll += profile.tp_collectives         # recompute repeats fwd collectives
     return n_coll * hw.allreduce_time(nbytes, strat.tp, env.cluster)
+
+
+def cp_comm_time(profile: LayerProfile, strat: LayerStrategy, env: CostEnv) -> float:
+    """Ring flash-attention k/v rotation over the cp group, per microbatch.
+
+    One full ring pass is (cp-1) neighbor hops of 2·(seq/cp)·(H/tp)·hd bytes
+    — the GQA-expanded, tp-head-sharded k and v blocks the runtime actually
+    permutes (profiler_model.cp_ring_bytes carries the expanded-H volume;
+    tp divides it here, matching the head sharding).  Three passes per
+    microbatch: the forward k/v ring, the backward's recompute k/v ring
+    (flash-VJP semantics — the ring runs under jax.checkpoint), and the
+    backward dk/dv-partial rotation (the transpose of every roll/ppermute).
+    Each hop overlaps with the previous block's attention compute (a
+    (S/cp)² score block) — only the excess is exposed."""
+    cp = max(strat.cp, 1)
+    if cp <= 1 or profile.cp_ring_bytes == 0:
+        return 0.0
+    hop_bytes = env.local(strat) * profile.cp_ring_bytes / cp / max(strat.tp, 1)
+    eff = env.cluster.peak_flops * env.cluster.flops_efficiency
+    block_compute = (profile.flops_quadratic / (strat.tp * cp * cp)
+                     ) * env.local(strat) / eff
+    hop = hw.ring_hop_time(hop_bytes, env.cluster, intra=True)
+    exposed_pass = (cp - 1) * hw.exposed_time(hop, block_compute)
+    return 3.0 * exposed_pass         # fwd + bwd-recompute + dk/dv rings
 
 
 def _d_model(profile: LayerProfile) -> float:
@@ -111,8 +148,9 @@ def _d_model(profile: LayerProfile) -> float:
 
 
 def dp_comm_time(profile: LayerProfile, strat: LayerStrategy, env: CostEnv) -> float:
-    """Gradient/param traffic over the DP group, once per optimizer step."""
-    dp = env.dp(strat)
+    """Gradient/param traffic over the state group (dp·cp — cp replicates
+    params, so its ranks join every grad reduction), once per optimizer step."""
+    dp = env.state_dp(strat)
     if dp <= 1:
         return 0.0
     tp_share = profile.param_count_tp / max(strat.tp, 1) + \
@@ -151,6 +189,7 @@ def layer_step_time(profile: LayerProfile, strat: LayerStrategy, env: CostEnv) -
     M microbatches of compute+TP+EP, plus DP traffic with overlap credit."""
     per_micro = (compute_time(profile, strat, env)
                  + tp_comm_time(profile, strat, env)
+                 + cp_comm_time(profile, strat, env)
                  + ep_comm_time(profile, strat, env))
     compute_total = env.grad_accum * per_micro
     dp = dp_comm_time(profile, strat, env)
@@ -161,11 +200,15 @@ def layer_step_time(profile: LayerProfile, strat: LayerStrategy, env: CostEnv) -
 
 def transition_time(prev: LayerStrategy, nxt: LayerStrategy,
                     profile: LayerProfile, env: CostEnv) -> float:
-    """Activation resharding between differently-laid-out adjacent layers."""
-    if (prev.tp, prev.sp) == (nxt.tp, nxt.sp):
+    """Activation resharding between differently-laid-out adjacent layers.
+    Per-device boundary bytes divide by the seq sharding BOTH layouts share
+    (min cp) — a cp=4→cp=4 tp-change moves quarter blocks, while a cp→1
+    transition must materialize the full sequence somewhere."""
+    if (prev.tp, prev.sp, prev.cp) == (nxt.tp, nxt.sp, nxt.cp):
         return 0.0
-    nbytes = profile.seq_len * env.local(nxt) * _d_model(profile) * 2.0
-    n = max(prev.tp, nxt.tp, 2)
+    nbytes = (profile.seq_len * env.local(nxt) * _d_model(profile) * 2.0
+              / max(min(prev.cp, nxt.cp), 1))
+    n = max(prev.tp, nxt.tp, prev.cp, nxt.cp, 2)
     return env.grad_accum * 2.0 * hw.allgather_time(nbytes, n, env.cluster)
 
 
@@ -175,12 +218,13 @@ def pipeline_boundary_bytes(model_profile: ModelProfile, env: CostEnv,
 
     The runtime (parallel/pipeline.py) casts the boundary activation to fp32
     and permutes the whole ``(mb, seq, D)`` block; it is batch-sharded over
-    the DP axes only (D is replicated over the model axis at block
-    boundaries), so the per-device transfer divides by dp — NOT by
-    dp·tp(·pp) as the model once assumed."""
+    the DP axes and seq-sharded over the cp axis (D is replicated over the
+    model axis at block boundaries), so the per-device transfer divides by
+    dp·cp — NOT by dp·tp(·pp) as the model once assumed."""
     dp = env.dp(strat) if strat is not None else env.devices
+    cp = max(strat.cp, 1) if strat is not None else 1
     return (model_profile.d_model * model_profile.seq_len
-            * env.micro_batch / dp * 4.0)
+            * env.micro_batch / dp / cp * 4.0)
 
 
 def pipeline_extras(model_profile: ModelProfile, env: CostEnv,
@@ -205,8 +249,8 @@ def pipeline_extras(model_profile: ModelProfile, env: CostEnv,
 
 
 def head_time(model_profile: ModelProfile, strat: LayerStrategy, env: CostEnv) -> float:
-    """Embed + lm-head + loss, per step."""
+    """Embed + lm-head + loss, per step (seq-sharded over cp at boundaries)."""
     eff = env.cluster.peak_flops * env.cluster.flops_efficiency
-    shards = max(strat.tp, 1)
+    shards = max(strat.tp, 1) * max(strat.cp, 1)
     per_micro = (model_profile.head_flops * env.local(strat) / shards / eff) * 3.0
     return env.grad_accum * per_micro

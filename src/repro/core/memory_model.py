@@ -5,8 +5,9 @@ m/v (8B) = 16B, each divided by the DP degree at its ZeRO stage and by the TP
 degree for TP-sharded matrices (expert matrices divide by ep·tp instead).
 Activations follow the saved-tensor inventory from the model profiler,
 scaled by the local microbatch, divided by TP for the inner (head-/ff-
-sharded) region and by TP for the boundary region only under SP, and reduced
-by the recomputation level.  The pipeline path multiplies activations by the
+sharded) region and by TP for the boundary region only under SP, divided by
+the context-parallel degree everywhere (cp shards the sequence through the
+whole layer — ring attention), and reduced by the recomputation level.  The pipeline path multiplies activations by the
 schedule's in-flight microbatch count (``CostEnv.pp_inflight``): GPipe holds
 all M = max(grad_accum, pp) microbatches at peak, 1F1B holds min(pp, M),
 interleaved holds a pp·(1+(v-1)/v) warm-up term.  Shared-weight groups
@@ -28,7 +29,9 @@ OPT_BYTES = 8.0          # adam m+v fp32 (AdamWConfig can halve this — see not
 
 def layer_state_bytes(profile: LayerProfile, strat: LayerStrategy, env: CostEnv,
                       *, count_params: bool = True) -> float:
-    dp, tp, ep = env.dp(strat), strat.tp, strat.ep
+    # ZeRO shards states over the dp·cp group — cp replicates parameters
+    # (only activations are sequence-sharded), so its ranks join the layout
+    dp, tp, ep = env.state_dp(strat), strat.tp, strat.ep
     dense_tp = profile.param_count_tp / tp
     dense_rest = profile.param_count - profile.param_count_tp - profile.expert_param_count
     experts = profile.expert_param_count / max(ep * tp, 1)
@@ -45,14 +48,16 @@ def layer_state_bytes(profile: LayerProfile, strat: LayerStrategy, env: CostEnv,
 def layer_act_bytes(profile: LayerProfile, strat: LayerStrategy, env: CostEnv) -> float:
     samples = env.local(strat)
     tp = strat.tp
-    boundary = profile.act_boundary / (tp if strat.sp else 1)
+    cp = max(strat.cp, 1)     # context parallelism shards the seq dim of the
+                              # FULL layer's activations — inner and boundary
+    boundary = profile.act_boundary / (tp if strat.sp else 1) / cp
     if strat.remat == "full":
         inner = 0.0
-        boundary = profile.act_boundary / (4.0 if not strat.sp else 4.0 * tp)  # input only
+        boundary = profile.act_boundary / (4.0 if not strat.sp else 4.0 * tp) / cp
     elif strat.remat == "selective":
-        inner = profile.act_selective_inner / tp
+        inner = profile.act_selective_inner / tp / cp
     else:
-        inner = profile.act_inner / tp
+        inner = profile.act_inner / tp / cp
     # Schedule-aware in-flight count (CostEnv.pp_inflight): GPipe holds every
     # one of the step's M = max(grad_accum, pp) microbatches at peak — the old
     # `pp` here under-counted whenever grad_accum > pp and let the search emit
@@ -68,14 +73,16 @@ def layer_memory(profile: LayerProfile, strat: LayerStrategy, env: CostEnv,
 
 
 def fixed_memory(model_profile: ModelProfile, strat: LayerStrategy, env: CostEnv) -> float:
-    """Embedding states + logits working set (per device)."""
+    """Embedding states + logits working set (per device).  The logits are
+    seq-sharded under cp (the lm head consumes cp-sharded boundary acts)."""
     cfg = model_profile.cfg
     p_embed = model_profile.embed_params
     vocab_shardable = cfg.vocab_size % max(strat.tp, 1) == 0
     tp = strat.tp if vocab_shardable else 1
-    p_local = p_embed / tp / (env.dp(strat) if strat.zero >= 3 else 1)
+    p_local = p_embed / tp / (env.state_dp(strat) if strat.zero >= 3 else 1)
     states = (MASTER_BYTES + GRAD_BYTES + getattr(env, "opt_bytes", OPT_BYTES) + 2.0) * p_local
-    logits = 2.5 * model_profile.logits_bytes * env.local(strat) / max(tp, 1)
+    logits = (2.5 * model_profile.logits_bytes * env.local(strat)
+              / max(tp, 1) / max(strat.cp, 1))
     return states + logits
 
 

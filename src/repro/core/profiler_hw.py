@@ -53,6 +53,25 @@ def p2p_time(nbytes: float, cluster: ClusterSpec, inter: bool = True) -> float:
     return nbytes / bw + lat
 
 
+def ring_hop_time(nbytes: float, cluster: ClusterSpec, intra: bool = True) -> float:
+    """One neighbor hop of a ring rotation (context-parallel k/v blocks).
+    cp lives inside the fast domain (like TP), so hops ride intra links by
+    default."""
+    if nbytes == 0:
+        return 0.0
+    return p2p_time(nbytes, cluster, inter=not intra)
+
+
+def exposed_time(comm: float, compute: float, *, floor_frac: float = 0.05) -> float:
+    """Communication time left exposed after overlapping with ``compute``
+    (per-hop k/v rotation overlaps the previous block's attention math); a
+    ``floor_frac`` share is always exposed — launch/sync overhead never fully
+    hides."""
+    if comm <= 0.0:
+        return 0.0
+    return max(comm - compute, floor_frac * comm)
+
+
 # ---- measured path ---------------------------------------------------------
 
 @dataclasses.dataclass

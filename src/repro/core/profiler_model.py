@@ -46,6 +46,8 @@ class LayerProfile:
     tp_collectives: int             # all-reduce volume factors per fwd (count of S*d AR)
     ep_a2a_bytes: float             # MoE dispatch+combine bytes/sample (over ep group)
     expert_param_count: int = 0     # sharded over ep instead of tp
+    cp_ring_bytes: float = 0.0      # k+v bytes/sample one full ring pass moves
+                                    # (0 => layer cannot context-parallelize)
 
     @property
     def flops(self) -> float:
@@ -148,6 +150,11 @@ def _dense_block(cfg: ModelConfig, S: int, causal_frac: float, name: str,
         shared_group=shared,
         act_inner=inner, act_boundary=boundary, act_selective_inner=sel,
         tp_collectives=2, ep_a2a_bytes=0.0,
+        # k+v blocks, bf16.  The runtime rings k/v AFTER GQA expansion
+        # (attention_block expands to the q-head count before attention_math),
+        # so the per-hop volume scales with H, not KV — and divides by tp in
+        # the cost model, since the expanded heads are tp-sharded.
+        cp_ring_bytes=2.0 * S * H * hd * 2.0,
     )
 
 

@@ -50,7 +50,10 @@ class SearchEngine:
         return profile_model(self.cfg, seq_len, causal_frac=self.causal_frac)
 
     def _union_candidates(self, devices: int, mesh_tp: Optional[int],
-                          mesh_data: Optional[int] = None) -> list[LayerStrategy]:
+                          mesh_data: Optional[int] = None,
+                          mesh_cp: Optional[int] = None,
+                          seq_len: Optional[int] = None,
+                          mesh_constrained: bool = True) -> list[LayerStrategy]:
         kinds = {"attn_block"}
         if self.cfg.num_experts:
             kinds.add("moe_block")
@@ -62,7 +65,9 @@ class SearchEngine:
                     self.cfg, devices,
                     max_tp=min(self.cluster.intra_size, devices),
                     mesh_constrained_tp=mesh_tp, mesh_data_axis=mesh_data,
-                    layer_kind=kind):
+                    layer_kind=kind, seq_len=seq_len,
+                    mesh_constrained_cp=mesh_cp if mesh_constrained else None,
+                    max_cp=mesh_cp if not mesh_constrained else None):
                 seen[s] = None
         return list(seen)
 
@@ -79,6 +84,7 @@ class SearchEngine:
         pp_options: Optional[list] = None,
         pp_schedule_options: Optional[list] = None,   # [(schedule, interleave), ...]
         grad_accum_options: Optional[list] = None,
+        cp_options: Optional[list] = None,   # pin cp degrees (None = full space)
         n_buckets: int = 1024,
         arch: str = "",
         shape_name: str = "",
@@ -90,6 +96,8 @@ class SearchEngine:
         mesh_tp = mesh_shape[mesh_axes.index("model")] if mesh_constrained else None
         mesh_data = mesh_shape[mesh_axes.index("data")] if mesh_constrained else None
         pods = mesh_shape[mesh_axes.index("pod")] if "pod" in mesh_axes else 1
+        # cp degrees come from the mesh's cp axis (absent => cp stays 1)
+        mesh_cp = mesh_shape[mesh_axes.index("cp")] if "cp" in mesh_axes else None
 
         if pp_options is None:
             pp_options = [1] if pods == 1 else [1, pods]
@@ -111,9 +119,13 @@ class SearchEngine:
             if pp > 1 and cfg.num_layers % pp != 0:
                 continue                      # stage_stack needs equal stages
             devices = devices_total // pp
-            cands = self._union_candidates(devices, mesh_tp, mesh_data)
+            cands = self._union_candidates(devices, mesh_tp, mesh_data,
+                                           mesh_cp=mesh_cp, seq_len=seq_len,
+                                           mesh_constrained=mesh_constrained)
             if not sp_ok:
                 cands = [c for c in cands if not c.sp]
+            if cp_options is not None:
+                cands = [c for c in cands if c.cp in cp_options]
             for ga in grad_accum_options:
                 micro = global_batch // ga
                 for sched, virt in self._schedules_for(pp, ga, pp_schedule_options):
@@ -138,6 +150,7 @@ class SearchEngine:
                                pp_options=pp_options,
                                pp_schedule_options=pp_schedule_options,
                                grad_accum_options=grad_accum_options,
+                               cp_options=cp_options,
                                n_buckets=n_buckets, arch=arch, shape_name=shape_name)
             if res.feasible:
                 res.plan.notes += " | bf16-adam (fp32 states infeasible)"
@@ -194,8 +207,8 @@ class SearchEngine:
                          opt_bytes=self.opt_bytes,
                          pp_schedule=schedule, pp_interleave=interleave)
         for ci, s in enumerate(cands):
-            dp = devices // s.tp
-            if dp * s.tp != devices or s.ep > dp:
+            dp = devices // (s.tp * s.cp)
+            if dp * s.tp * s.cp != devices or s.ep > dp:
                 continue
             if micro % dp != 0:
                 # microbatch must shard evenly over this candidate's DP degree
@@ -207,6 +220,9 @@ class SearchEngine:
                     continue
                 if lp.kind == "moe_block" and cfg.num_experts % s.ep != 0:
                     continue
+                if s.cp > 1 and (lp.kind != "attn_block"
+                                 or lp.cp_ring_bytes == 0):
+                    continue          # ring attention: dense attn blocks only
                 count = True
                 if lp.shared_group is not None:
                     count = lp.shared_group not in seen_shared
@@ -308,17 +324,19 @@ def evaluate_uniform(
     pp_schedule: str = "gpipe",
     pp_interleave: int = 1,
     causal_frac: float = 0.5,
+    opt_bytes: float = 8.0,
 ) -> tuple[float, float, bool]:
     """(step_time, per-device memory, feasible) for one uniform strategy —
     used to cost the manually-tuned baseline systems (Fig. 3 benchmark)."""
     profile = profile_model(cfg, seq_len, causal_frac=causal_frac)
     stage_devices = devices // pp
-    dp = stage_devices // strategy.tp
+    dp = stage_devices // (strategy.tp * strategy.cp)
     micro = global_batch // grad_accum
-    if dp < 1 or dp * strategy.tp != stage_devices or micro % dp != 0:
+    if dp < 1 or dp * strategy.tp * strategy.cp != stage_devices or micro % dp != 0:
         return INF, INF, False
     env = cm.CostEnv(cluster=cluster, devices=stage_devices, pp=pp,
                      micro_batch=micro, grad_accum=grad_accum,
+                     opt_bytes=opt_bytes,
                      pp_schedule=pp_schedule, pp_interleave=pp_interleave)
     t = 0.0
     seen: set = set()

@@ -32,11 +32,16 @@ class LayerStrategy:
     """Per-layer hybrid-parallel decision (one node of the decision tree).
 
     ``tp`` is the tensor-parallel degree over the "model" mesh axis; ``dp`` is
-    implied by the mesh (devices / (tp·pp)).  ``zero`` applies to the layer's
-    parameters/grads/optimizer state over the DP axes.  ``sp`` toggles
-    Megatron-style sequence parallelism (requires tp>1).  ``ep`` shards MoE
-    experts over the "data" axis.  ``remat`` is the recomputation level —
-    the paper treats it as an extra parallelism dimension, and so do we.
+    implied by the mesh (devices / (tp·cp·pp)).  ``zero`` applies to the
+    layer's parameters/grads/optimizer state over the DP axes (plus the cp
+    axis — cp replicates parameters).  ``sp`` toggles Megatron-style sequence
+    parallelism at block boundaries (requires tp>1).  ``cp`` is the
+    context-parallel degree over the "cp" mesh axis: the sequence is sharded
+    *through* attention and k/v blocks ring-rotate (parallel/context.py);
+    realizable only when cp divides the heads-free sequence into 2·cp zig-zag
+    chunks (``validate_cp``).  ``ep`` shards MoE experts over the "data"
+    axis.  ``remat`` is the recomputation level — the paper treats it as an
+    extra parallelism dimension, and so do we.
     """
 
     tp: int = 1
@@ -44,6 +49,7 @@ class LayerStrategy:
     zero: int = 1          # 0 | 1 | 2 | 3
     remat: str = "none"    # none | selective | full
     ep: int = 1
+    cp: int = 1            # context-parallel (ring attention) degree
 
     def __post_init__(self):
         if self.remat not in REMAT_POLICIES:
@@ -52,9 +58,12 @@ class LayerStrategy:
             raise ValueError("sequence parallelism requires tp > 1")
         if self.zero not in (0, 1, 2, 3):
             raise ValueError(f"bad zero stage {self.zero}")
+        if self.cp < 1:
+            raise ValueError(f"bad cp degree {self.cp}")
 
     def short(self) -> str:
-        return (f"tp{self.tp}{'-sp' if self.sp else ''}-z{self.zero}"
+        return (f"tp{self.tp}{'-sp' if self.sp else ''}"
+                f"{f'-cp{self.cp}' if self.cp > 1 else ''}-z{self.zero}"
                 f"{f'-ep{self.ep}' if self.ep > 1 else ''}"
                 f"{'' if self.remat == 'none' else '-' + self.remat}")
 
@@ -119,15 +128,33 @@ class ExecutionPlan:
         """DP axes for one layer strategy: when the layer does not use TP the
         model axis is absorbed into DP (dp = devices / tp), so a tp=1 layer
         shards its batch/ZeRO over pod×data×model — otherwise 15/16ths of the
-        mesh would sit idle for that layer."""
+        mesh would sit idle for that layer.  The cp axis is absorbed the same
+        way for cp=1 layers; a cp>1 layer's cp axis carries sequence shards,
+        never batch."""
         axes = self.dp_axes
+        if strategy.cp == 1 and "cp" in self.mesh_axes:
+            axes = axes + ("cp",)
         if strategy.tp == 1 and "model" in self.mesh_axes:
             axes = axes + ("model",)
+        return axes
+
+    def state_axes_for(self, strategy: "LayerStrategy") -> tuple[str, ...]:
+        """Axes carrying ZeRO parameter/grad/optimizer-state sharding.
+        Context parallelism replicates parameters over the cp axis (only
+        activations are seq-sharded), so ZeRO may shard states there even
+        though the batch cannot — the state-sharding group is dp·cp wide."""
+        axes = self.dp_axes_for(strategy)
+        if strategy.cp > 1 and "cp" in self.mesh_axes and "cp" not in axes:
+            axes = axes + ("cp",)
         return axes
 
     @property
     def tp_axis(self) -> str:
         return "model"
+
+    @property
+    def cp_axis(self) -> str:
+        return "cp"
 
     def groups(self) -> list[GroupSpec]:
         """Contiguous equal-strategy runs (each becomes one lax.scan chain)."""

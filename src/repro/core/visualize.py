@@ -16,6 +16,18 @@ from repro.core.strategy import ExecutionPlan
 _GLYPH = {"none": "█", "selective": "▓", "full": "░"}
 
 
+def _seq_glyph(s) -> str:
+    """Sequence-dimension handling per layer: R = cp ring (through attention),
+    possibly stacked with Megatron-SP; S = SP only (block boundaries); · =
+    full sequence per device.  Renders what ``short()`` strings alone hid:
+    tp-only plans used to look identical whether or not they sharded seq."""
+    if s.cp > 1:
+        return "R"
+    if s.sp:
+        return "S"
+    return "·"
+
+
 def render_plan(
     cfg: ModelConfig,
     plan: ExecutionPlan,
@@ -43,6 +55,9 @@ def render_plan(
     strats = plan.layer_strategies
     band = "".join(_GLYPH.get(s.remat, "?") for s in strats)
     lines.append(f"  {band}")
+    # sequence band: where does each layer's seq dim live?
+    lines.append("seq map (R cp-ring S megatron-sp · replicated):")
+    lines.append("  " + "".join(_seq_glyph(s) for s in strats))
     # group legend with per-group costs
     lines.append("")
     lines.append(f"  {'layers':>10s}  {'strategy':22s} {'t/layer':>9s} {'mem/layer':>10s}")
@@ -60,10 +75,12 @@ def render_plan(
     tpc = cm.tp_comm_time(lp0, s0, env)
     dpc = cm.dp_comm_time(lp0, s0, env)
     epc = cm.ep_comm_time(lp0, s0, env)
+    cpc = cm.cp_comm_time(lp0, s0, env)
     lines += [
         "",
         f"per-layer cost split (default {s0.short()}):",
         f"  compute {comp*1e3:8.2f} ms/micro · tp-comm {tpc*1e3:.2f} · "
-        f"dp-comm {dpc*1e3:.2f}/step · ep-comm {epc*1e3:.2f}",
+        f"cp-ring {cpc*1e3:.2f} · dp-comm {dpc*1e3:.2f}/step · "
+        f"ep-comm {epc*1e3:.2f}",
     ]
     return "\n".join(lines)

@@ -12,6 +12,14 @@ Design for the TPU memory hierarchy (DESIGN.md §7):
     blocks still run — a future hillclimb can skip them by shrinking the kv
     grid per q block (§Perf notes).
 
+Context-parallel extensions (parallel/context.py rides these):
+  * ``q_pos``/``k_pos`` (B, S) int32 — explicit global positions replacing the
+    iota offsets in the causal mask, so a zig-zag sequence shard (whose local
+    rows are non-contiguous in global positions) masks exactly.
+  * ``return_residuals=True`` — also emit the softmax stats (m, l) per row,
+    letting ring attention merge partial results from different kv shards with
+    the same online-softmax merge the kernel itself runs across its kv grid.
+
 Validated with ``interpret=True`` on CPU against ``ref.attention_reference``.
 """
 from __future__ import annotations
@@ -30,11 +38,22 @@ DEFAULT_BLOCK_Q = 128
 DEFAULT_BLOCK_KV = 128
 
 
-def _flash_fwd_kernel(q_ref, k_ref, v_ref,            # VMEM inputs
-                      o_ref,                           # VMEM output
-                      acc_ref, m_ref, l_ref,           # VMEM scratch (fp32)
-                      *, causal: bool, block_q: int, block_kv: int,
+def _flash_fwd_kernel(*refs, causal: bool, positional: bool, residuals: bool,
+                      block_q: int, block_kv: int,
                       num_kv_blocks: int, scale: float):
+    refs = list(refs)
+    q_ref, k_ref, v_ref = refs[:3]
+    refs = refs[3:]
+    if positional:
+        qp_ref, kp_ref = refs[:2]
+        refs = refs[2:]
+    o_ref = refs[0]
+    refs = refs[1:]
+    if residuals:
+        m_out, l_out = refs[:2]
+        refs = refs[2:]
+    acc_ref, m_ref, l_ref = refs
+
     qi = pl.program_id(1)
     kj = pl.program_id(2)
 
@@ -52,8 +71,14 @@ def _flash_fwd_kernel(q_ref, k_ref, v_ref,            # VMEM inputs
                             preferred_element_type=jnp.float32) * scale
 
     if causal:
-        q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_kv), 0)
-        k_pos = kj * block_kv + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_kv), 1)
+        if positional:
+            q_pos = qp_ref[0][:, None]                 # (bq, 1) global positions
+            k_pos = kp_ref[0][None, :]                 # (1, bk)
+        else:
+            q_pos = qi * block_q + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_kv), 0)
+            k_pos = kj * block_kv + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_kv), 1)
         s = jnp.where(k_pos <= q_pos, s, NEG_INF)
 
     m_prev = m_ref[...]
@@ -70,19 +95,47 @@ def _flash_fwd_kernel(q_ref, k_ref, v_ref,            # VMEM inputs
     @pl.when(kj == num_kv_blocks - 1)
     def _finalize():
         o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)[:, None]).astype(o_ref.dtype)
+        if residuals:
+            m_out[0] = m_ref[...]
+            l_out[0] = l_ref[...]
+
+
+def _tile_positions(pos, B: int, H: int, S: int):
+    """(S,) or (B, S) int32 positions -> (B·H, S) matching the kernel grid."""
+    pos = jnp.asarray(pos, jnp.int32)
+    if pos.ndim == 1:
+        pos = jnp.broadcast_to(pos[None], (B, S))
+    return jnp.broadcast_to(pos[:, None, :], (B, H, S)).reshape(B * H, S)
 
 
 def flash_attention_fwd(q, k, v, *, causal: bool = True,
+                        q_pos=None, k_pos=None,
+                        return_residuals: bool = False,
                         block_q: int = DEFAULT_BLOCK_Q,
                         block_kv: int = DEFAULT_BLOCK_KV,
                         interpret: bool = False):
-    """q/k/v: (B, S, H, hd) with equal head counts -> (B, S, H, hd)."""
+    """q/k/v: (B, S, H, hd) with equal head counts -> (B, S, H, hd).
+
+    ``q_pos``/``k_pos`` ((S,) or (B, S) int32) switch the causal mask to
+    explicit global positions (context-parallel zig-zag shards).  With
+    ``return_residuals`` the result is ``(out, m, l)`` with m/l (B, H, S)
+    fp32 softmax stats for partial-result merging.
+    """
     B, Sq, H, hd = q.shape
     Sk = k.shape[1]
+    # shrink blocks to divisors (ring shards hand in seq/cp slices that need
+    # not be 128-multiples); same degradation rule as chunked_attention
     block_q = min(block_q, Sq)
     block_kv = min(block_kv, Sk)
+    while Sq % block_q:
+        block_q //= 2
+    while Sk % block_kv:
+        block_kv //= 2
     assert Sq % block_q == 0 and Sk % block_kv == 0, (Sq, Sk, block_q, block_kv)
     nq, nk = Sq // block_q, Sk // block_kv
+    positional = causal and q_pos is not None
+    if positional:
+        assert k_pos is not None, "q_pos requires k_pos"
 
     # (B, S, H, hd) -> (B*H, S, hd): one grid row per (batch, head)
     qt = q.transpose(0, 2, 1, 3).reshape(B * H, Sq, hd)
@@ -90,19 +143,39 @@ def flash_attention_fwd(q, k, v, *, causal: bool = True,
     vt = v.transpose(0, 2, 1, 3).reshape(B * H, Sk, hd)
 
     kernel = functools.partial(
-        _flash_fwd_kernel, causal=causal, block_q=block_q, block_kv=block_kv,
+        _flash_fwd_kernel, causal=causal, positional=positional,
+        residuals=return_residuals, block_q=block_q, block_kv=block_kv,
         num_kv_blocks=nk, scale=hd ** -0.5)
+
+    in_specs = [
+        pl.BlockSpec((1, block_q, hd), lambda b, i, j: (b, i, 0)),
+        pl.BlockSpec((1, block_kv, hd), lambda b, i, j: (b, j, 0)),
+        pl.BlockSpec((1, block_kv, hd), lambda b, i, j: (b, j, 0)),
+    ]
+    inputs = [qt, kt, vt]
+    if positional:
+        in_specs += [
+            pl.BlockSpec((1, block_q), lambda b, i, j: (b, i)),
+            pl.BlockSpec((1, block_kv), lambda b, i, j: (b, j)),
+        ]
+        inputs += [_tile_positions(q_pos, B, H, Sq),
+                   _tile_positions(k_pos, B, H, Sk)]
+
+    out_specs = pl.BlockSpec((1, block_q, hd), lambda b, i, j: (b, i, 0))
+    out_shape = jax.ShapeDtypeStruct((B * H, Sq, hd), q.dtype)
+    if return_residuals:
+        stat_spec = pl.BlockSpec((1, block_q), lambda b, i, j: (b, i))
+        out_specs = [out_specs, stat_spec, stat_spec]
+        out_shape = [out_shape,
+                     jax.ShapeDtypeStruct((B * H, Sq), jnp.float32),
+                     jax.ShapeDtypeStruct((B * H, Sq), jnp.float32)]
 
     out = pl.pallas_call(
         kernel,
         grid=(B * H, nq, nk),
-        in_specs=[
-            pl.BlockSpec((1, block_q, hd), lambda b, i, j: (b, i, 0)),
-            pl.BlockSpec((1, block_kv, hd), lambda b, i, j: (b, j, 0)),
-            pl.BlockSpec((1, block_kv, hd), lambda b, i, j: (b, j, 0)),
-        ],
-        out_specs=pl.BlockSpec((1, block_q, hd), lambda b, i, j: (b, i, 0)),
-        out_shape=jax.ShapeDtypeStruct((B * H, Sq, hd), q.dtype),
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
         scratch_shapes=[
             pltpu.VMEM((block_q, hd), jnp.float32),    # acc
             pltpu.VMEM((block_q,), jnp.float32),       # m (running max)
@@ -112,5 +185,9 @@ def flash_attention_fwd(q, k, v, *, causal: bool = True,
         compiler_params=pltpu.CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ) if not interpret else None,
-    )(qt, kt, vt)
+    )(*inputs)
+    if return_residuals:
+        o, m, l = out
+        return (o.reshape(B, H, Sq, hd).transpose(0, 2, 1, 3),
+                m.reshape(B, H, Sq), l.reshape(B, H, Sq))
     return out.reshape(B, H, Sq, hd).transpose(0, 2, 1, 3)

@@ -52,18 +52,29 @@ def _mesh_tag(multi_pod: bool) -> str:
     return "pod2x16x16" if multi_pod else "pod16x16"
 
 
+def _axis_mesh(degree: int, axis: str, flag: str) -> tuple[tuple, str]:
+    """(degree, data, model=16) mesh shape + result tag for a cell with a
+    leading staged/ring axis ("pod" for --pp cells, "cp" for --cp cells)."""
+    if FAKE_DEVICES % (degree * 16) != 0 or degree > 32:
+        raise ValueError(
+            f"{flag} {degree} does not tile the {FAKE_DEVICES}-device "
+            f"dry-run host (need {flag.lstrip('-')}*16 | {FAKE_DEVICES}, "
+            f"{flag.lstrip('-')} <= 32)")
+    shape = (degree, FAKE_DEVICES // (degree * 16), 16)
+    return shape, axis + "x".join(map(str, shape))
+
+
 def _pp_mesh(pp: int) -> tuple[tuple, str]:
-    """Staged mesh shape + result tag for a --pp cell (pod axis = stages)."""
-    if FAKE_DEVICES % (pp * 16) != 0 or pp > 32:
-        raise ValueError(f"--pp {pp} does not tile the {FAKE_DEVICES}-device "
-                         f"dry-run host (need pp*16 | {FAKE_DEVICES}, pp <= 32)")
-    shape = (pp, FAKE_DEVICES // (pp * 16), 16)
-    return shape, "pod" + "x".join(map(str, shape))
+    return _axis_mesh(pp, "pod", "--pp")
+
+
+def _cp_mesh(cp: int) -> tuple[tuple, str]:
+    return _axis_mesh(cp, "cp", "--cp")
 
 
 def _plan_for(cfg, spec, mesh_shape, mesh_axes, arch, shape_id,
               pp: int = 1, pp_schedule: str | None = None,
-              pp_interleave: int = 2):
+              pp_interleave: int = 2, cp: int = 1):
     if spec.kind == "train":
         eng = SearchEngine(cfg)
         sched_opts = None
@@ -75,6 +86,8 @@ def _plan_for(cfg, spec, mesh_shape, mesh_axes, arch, shape_id,
                          # pp=1 -> GSPMD path; --pp stages over the pod axis
                          pp_options=[pp],
                          pp_schedule_options=sched_opts,
+                         # --cp pins the ring degree on the cp-axis mesh
+                         cp_options=[cp] if cp > 1 else None,
                          arch=arch, shape_name=shape_id)
         return res.plan, {"search_seconds": res.search_seconds,
                           "search_feasible": res.feasible}
@@ -96,6 +109,7 @@ def _summarize_plan(plan) -> dict:
         ss[s.short()] = ss.get(s.short(), 0) + 1
     return {"pp": plan.pp, "pp_schedule": plan.pp_schedule,
             "pp_interleave": plan.pp_interleave, "grad_accum": plan.grad_accum,
+            "cp": plan.default_strategy.cp,
             "strategies": ss, "default": plan.default_strategy.short(),
             "predicted_step_time": plan.predicted_step_time,
             "predicted_memory": plan.predicted_memory,
@@ -108,10 +122,21 @@ def run_cell(arch: str, shape_id: str, *, multi_pod: bool = False,
              force_strategy: str | None = None,
              force_ga: int | None = None,
              pp: int = 1, pp_schedule: str | None = None,
-             pp_interleave: int = 2) -> dict:
+             pp_interleave: int = 2, cp: int = 1,
+             seq_len: int | None = None) -> dict:
     cfg = get_config(arch)
     spec = SHAPES[shape_id]
-    if pp > 1:                                       # staged: pod axis = stages
+    if seq_len is not None:                          # long-context override
+        spec = dataclasses.replace(spec, seq_len=seq_len)
+    if pp > 1 and cp > 1:
+        raise ValueError("--pp and --cp dry-run cells are separate scenarios")
+    if cp > 1:                                       # ring: cp axis = seq shards
+        if spec.seq_len % (2 * cp) != 0:
+            raise ValueError(f"--cp {cp} needs seq_len % (2*cp) == 0; "
+                             f"got {spec.seq_len}")
+        shape, mesh_tag = _cp_mesh(cp)
+        mesh = make_mesh(shape, ("cp", "data", "model"))
+    elif pp > 1:                                     # staged: pod axis = stages
         shape, mesh_tag = _pp_mesh(pp)
         mesh = make_mesh(shape, ("pod", "data", "model"))
     elif custom_mesh is not None:                    # §Perf: alternative meshes
@@ -134,17 +159,22 @@ def run_cell(arch: str, shape_id: str, *, multi_pod: bool = False,
             print(f"[skip] {arch} × {shape_id}: {why}")
         return out
 
-    if pp > 1 and spec.kind != "train":
-        raise ValueError(f"--pp applies to train shapes, not {spec.kind}")
+    if (pp > 1 or cp > 1) and spec.kind != "train":
+        raise ValueError(f"--pp/--cp apply to train shapes, not {spec.kind}")
     plan, search_meta = _plan_for(cfg, spec, mesh_shape, mesh_axes, arch, shape_id,
                                   pp=pp, pp_schedule=pp_schedule,
-                                  pp_interleave=pp_interleave)
+                                  pp_interleave=pp_interleave, cp=cp)
     if pp > 1 and (not search_meta["search_feasible"] or plan.pp != pp):
         # the search falls back to a pp=1 plan when nothing fits — don't file
         # a pp=1 measurement under a staged-mesh result tag
         raise ValueError(
             f"no feasible pp={pp} plan for {arch}×{shape_id} "
             f"(schedule={pp_schedule or 'searched'}; fallback pp={plan.pp})")
+    if cp > 1 and (not search_meta["search_feasible"]
+                   or plan.default_strategy.cp != cp):
+        raise ValueError(
+            f"no feasible cp={cp} plan for {arch}×{shape_id} "
+            f"(needs dense family + seq % (2*cp) == 0)")
     if force_strategy is not None:                   # §Perf: pinned variants
         from repro.core.strategy import LayerStrategy
 
@@ -155,6 +185,8 @@ def run_cell(arch: str, shape_id: str, *, multi_pod: bool = False,
                 kw["tp"] = int(tkn[2:])
             elif tkn == "sp":
                 kw["sp"] = True
+            elif tkn.startswith("cp"):
+                kw["cp"] = int(tkn[2:])
             elif tkn.startswith("z"):
                 kw["zero"] = int(tkn[1:])
             elif tkn.startswith("ep"):
@@ -286,6 +318,12 @@ def main():
                     choices=["gpipe", "1f1b", "interleaved"],
                     help="pin the pipeline schedule (default: searched)")
     ap.add_argument("--pp-interleave", type=int, default=2)
+    ap.add_argument("--cp", type=int, default=1,
+                    help=">1 rings attention over a cp axis (context-parallel "
+                         "cell; needs seq %% (2*cp) == 0)")
+    ap.add_argument("--seq-len", type=int, default=None,
+                    help="override the shape's sequence length (long-context "
+                         "cells, e.g. --arch llama3.2-1b-long --seq-len 32768)")
     ap.add_argument("--tag", default="", help="output filename suffix")
     args = ap.parse_args()
 
@@ -297,8 +335,8 @@ def main():
     else:
         assert args.arch and args.shape, "--arch and --shape (or --all)"
         cells = [(args.arch, args.shape)]
-    if args.pp > 1:
-        meshes = [False]           # staged cells build their own pod mesh
+    if args.pp > 1 or args.cp > 1:
+        meshes = [False]           # staged/ring cells build their own mesh
     elif args.both_meshes or (args.all and not args.multipod):
         meshes = [False, True]
     else:
@@ -308,12 +346,16 @@ def main():
     failures = 0
     for arch, shape_id in cells:
         for mp in meshes:
-            if args.pp > 1:
+            if args.cp > 1:
+                mtag = _cp_mesh(args.cp)[1]
+            elif args.pp > 1:
                 mtag = _pp_mesh(args.pp)[1]
             elif custom:
                 mtag = "x".join(map(str, custom))
             else:
                 mtag = _mesh_tag(mp)
+            if args.seq_len:
+                mtag += f"__seq{args.seq_len}"
             tag = f"{arch}__{shape_id}__{mtag}" + (f"__{args.tag}" if args.tag else "")
             path = outdir / f"{tag}.json"
             print(f"=== {tag} ===", flush=True)
@@ -324,7 +366,8 @@ def main():
                                force_strategy=args.force_strategy,
                                force_ga=args.force_ga,
                                pp=args.pp, pp_schedule=args.pp_schedule,
-                               pp_interleave=args.pp_interleave)
+                               pp_interleave=args.pp_interleave,
+                               cp=args.cp, seq_len=args.seq_len)
             except Exception as e:  # noqa: BLE001
                 failures += 1
                 res = {"arch": arch, "shape": shape_id, "mesh": mtag,

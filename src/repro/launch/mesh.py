@@ -7,8 +7,11 @@ carries either pipeline parallelism (PipelineTrainer) or an extra
 data-parallel/ZeRO dimension (GSPMD path) — see DESIGN.md §2.
 
 ``make_mesh`` builds arbitrary (dp, tp) meshes for free-mode searched plans
-and CPU-scale tests.  Both go through :mod:`repro.compat` so mesh
-construction works across JAX releases.
+and CPU-scale tests.  ``make_train_mesh`` assembles the staged/ring training
+mesh for ``--pp``/``--cp`` runs: the optional leading "pod" axis carries
+pipeline stages, the optional "cp" axis carries ring-attention sequence
+shards, and the remaining devices split into (data, model).  All go through
+:mod:`repro.compat` so mesh construction works across JAX releases.
 """
 from __future__ import annotations
 
@@ -23,3 +26,26 @@ def make_production_mesh(*, multi_pod: bool = False):
 
 def make_mesh(shape, axes):
     return compat.make_mesh(tuple(shape), tuple(axes))
+
+
+def train_mesh_spec(n_devices: int, *, pp: int = 1, cp: int = 1) -> tuple[tuple, tuple]:
+    """(shape, axes) for a training mesh with optional pipeline and
+    context-parallel axes.  Raises when pp·cp does not tile the devices."""
+    if pp < 1 or cp < 1:
+        raise ValueError(f"pp/cp must be >= 1, got pp={pp}, cp={cp}")
+    if n_devices % (pp * cp) != 0:
+        raise ValueError(f"pp={pp} x cp={cp} does not tile {n_devices} devices")
+    rest = n_devices // (pp * cp)
+    inner = (rest // 2, 2) if rest % 2 == 0 else (rest, 1)
+    shape: tuple = inner
+    axes: tuple = ("data", "model")
+    if cp > 1:
+        shape, axes = (cp,) + shape, ("cp",) + axes
+    if pp > 1:
+        shape, axes = (pp,) + shape, ("pod",) + axes
+    return shape, axes
+
+
+def make_train_mesh(n_devices: int, *, pp: int = 1, cp: int = 1):
+    shape, axes = train_mesh_spec(n_devices, pp=pp, cp=cp)
+    return compat.make_mesh(shape, axes)

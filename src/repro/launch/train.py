@@ -52,11 +52,15 @@ def main(argv=None):
     ap.add_argument("--preset", choices=["100m"], default=None)
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--steps", type=int, default=20)
-    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--seq", "--seq-len", dest="seq", type=int, default=128,
+                    help="sequence length (--seq-len is an alias)")
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--grad-accum", type=int, default=0, help="0 = searched")
     ap.add_argument("--pp", type=int, default=1,
                     help="pipeline stages (>1 stages the block stack over a pod axis)")
+    ap.add_argument("--cp", type=int, default=1,
+                    help="context-parallel degree (>1 runs attention as a "
+                         "ring over a cp mesh axis; needs seq %% (2*cp) == 0)")
     ap.add_argument("--pp-schedule", default="searched",
                     choices=["searched", "gpipe", "1f1b", "interleaved"],
                     help="pipeline schedule; 'searched' lets the engine pick")
@@ -75,46 +79,51 @@ def main(argv=None):
     n_dev = jax.device_count()
 
     # ---- plan: search the engine even at CPU scale (paper workflow) ------
+    if args.cp > 1:
+        if args.seq % (2 * args.cp) != 0:
+            raise SystemExit(f"--cp {args.cp} needs --seq % (2*cp) == 0 "
+                             f"(zig-zag split); got seq {args.seq}")
+        if cfg.family != "dense":
+            raise SystemExit(f"--cp supports dense-family archs; "
+                             f"{cfg.name} is {cfg.family}")
     if n_dev == 1:
+        if args.cp > 1:
+            print(f"warning: --cp {args.cp} ignored on a single device")
         strat = LayerStrategy(remat=args.remat or "none")
         plan = ExecutionPlan(arch=cfg.name, shape="train", mesh_axes=("data",),
                              mesh_shape=(1,), grad_accum=max(args.grad_accum, 1),
                              layer_strategies=[strat] * cfg.num_layers,
                              default_strategy=strat)
         mesh = None
-    elif args.pp > 1:
-        # staged run: pod axis carries the pipeline, schedule searched or pinned
-        if n_dev % args.pp != 0:
-            raise SystemExit(f"--pp {args.pp} does not divide the "
-                             f"{n_dev} visible devices")
-        stage_dev = n_dev // args.pp
-        shape = (args.pp, stage_dev // 2, 2) if stage_dev % 2 == 0 \
-            else (args.pp, stage_dev, 1)
+    else:
+        # staged/ring run: pod axis carries the pipeline, cp axis the
+        # ring-attention sequence shards; schedule/cp searched or pinned
+        try:
+            shape, axes = mesh_lib.train_mesh_spec(n_dev, pp=args.pp, cp=args.cp)
+        except ValueError as e:
+            raise SystemExit(str(e))
         sched_opts = None
         if args.pp_schedule != "searched":
             v = args.pp_interleave if args.pp_schedule == "interleaved" else 1
             sched_opts = [(args.pp_schedule, v)]
-        res = SearchEngine(cfg).search(args.seq, args.batch, mesh_shape=shape,
-                                       mesh_axes=("pod", "data", "model"),
-                                       pp_options=[args.pp],
-                                       pp_schedule_options=sched_opts,
-                                       arch=cfg.name)
-        if not res.feasible or res.plan.pp != args.pp:
+        res = SearchEngine(cfg).search(
+            args.seq, args.batch, mesh_shape=shape, mesh_axes=axes,
+            pp_options=[args.pp], pp_schedule_options=sched_opts,
+            cp_options=[args.cp] if args.cp > 1 else None,
+            arch=cfg.name)
+        if (args.pp > 1 or args.cp > 1) and (
+                not res.feasible or res.plan.pp != args.pp):
             # the search falls back to a pp=1 max-sharding plan when nothing
-            # fits — don't silently train something other than what was asked
+            # fits — don't silently train something other than what was asked.
+            # Plain (pp=1, cp=1) runs keep the historical best-effort
+            # behavior: train the fallback plan rather than abort.
             raise SystemExit(
-                f"no feasible pp={args.pp} plan for --pp-schedule "
-                f"{args.pp_schedule} ({cfg.num_layers} layers, {n_dev} devices"
-                f"; interleaved needs num_layers % (pp*interleave) == 0)")
+                f"no feasible pp={args.pp} cp={args.cp} plan for "
+                f"--pp-schedule {args.pp_schedule} ({cfg.num_layers} layers, "
+                f"{n_dev} devices; interleaved needs num_layers % "
+                f"(pp*interleave) == 0, cp needs seq % (2*cp) == 0)")
         plan = res.plan
-        mesh = mesh_lib.make_mesh(shape, ("pod", "data", "model"))
-    else:
-        shape = (n_dev // 2, 2) if n_dev % 2 == 0 else (n_dev, 1)
-        res = SearchEngine(cfg).search(args.seq, args.batch, mesh_shape=shape,
-                                       mesh_axes=("data", "model"), pp_options=[1],
-                                       arch=cfg.name)
-        plan = res.plan
-        mesh = mesh_lib.make_mesh(shape, ("data", "model"))
+        mesh = mesh_lib.make_mesh(shape, axes)
     sched = f" pp={plan.pp}/{plan.pp_schedule}" + (
         f"x{plan.pp_interleave}" if plan.pp_interleave > 1 else "") \
         if plan.pp > 1 else ""

@@ -28,7 +28,7 @@ from repro.configs.registry import ModelConfig
 from repro.models.common import ParamDef
 from repro.models.norms import head_rmsnorm
 from repro.models.rotary import apply_rope, rope_angles
-from repro.parallel.axes import current_rules, lc
+from repro.parallel.axes import current_rules, lc, ring_context
 
 NEG_INF = -0.7 * float(np.finfo(np.float32).max)
 DENSE_MAX_SEQ = 2048          # above this, use the chunked (flash-style) path
@@ -204,6 +204,21 @@ def chunked_attention(q, k, v, *, causal, q_offset=0, kv_len=None,
 
 
 def attention_math(q, k, v, *, causal, q_offset=0, kv_len=None, impl="ref"):
+    ring = ring_context()
+    if (ring is not None and kv_len is None and isinstance(q_offset, int)
+            and q_offset == 0 and q.shape[1] == k.shape[1]
+            and q.shape[1] % (2 * ring.cp) == 0):
+        # context parallelism: seq sharded through attention, k/v blocks
+        # ring-rotate over the cp axis.  Recompute ring blocks in the backward
+        # (flash VJP memory semantics) instead of saving per-step probability
+        # blocks into the layer-scan residuals.
+        from repro.parallel.context import ring_attention
+
+        fn = jax.checkpoint(
+            lambda q_, k_, v_: ring_attention(q_, k_, v_, causal=causal,
+                                              mesh=ring.mesh, axis=ring.axis),
+            policy=jax.checkpoint_policies.nothing_saveable)
+        return fn(q, k, v)
     if impl == "flash" and q.shape[1] >= 128:
         from repro.kernels.flash_attention.ops import flash_attention
 
@@ -298,12 +313,14 @@ def attention_block(
             if mode == "prefill":
                 new_cache = {"k": k, "v": v}
             q, ke, ve = expand_and_pad(q, k, v)
-            q = lc(q, "batch", None, "q_heads", None)
-            ke = lc(ke, "batch", None, "q_heads", None)
-            ve = lc(ve, "batch", None, "q_heads", None)
+            # "cp_seq" keeps the seq dim context-parallel-sharded inside the
+            # TP region (no-op without an active cp axis)
+            q = lc(q, "batch", "cp_seq", "q_heads", None)
+            ke = lc(ke, "batch", "cp_seq", "q_heads", None)
+            ve = lc(ve, "batch", "cp_seq", "q_heads", None)
             out = attention_math(q, ke, ve, causal=causal, kv_len=kv_len, impl=impl)
 
-    out = lc(out, "batch", None, "q_heads", None)
+    out = lc(out, "batch", "cp_seq", "q_heads", None)
     y = _out_proj(params, out, x.dtype, cfg.num_heads)
     return lc(y, "batch", "seq", "embed"), new_cache
 

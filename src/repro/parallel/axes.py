@@ -26,10 +26,17 @@ MeshAssignment = tuple[str, ...]  # e.g. ("pod", "data") for the dp logical axis
 
 @dataclass(frozen=True)
 class MeshRules:
-    """Mapping from logical axis names to mesh axis names (or None)."""
+    """Mapping from logical axis names to mesh axis names (or None).
+
+    ``ring`` names the mesh axis carrying context parallelism (ring
+    flash-attention) for the active layer group, if any — attention reads it
+    via :func:`ring_context` to route through parallel/context.py instead of
+    a plain sharding constraint (a constraint alone cannot express the
+    k/v ring rotation)."""
 
     rules: dict = field(default_factory=dict)
     mesh: Optional[Mesh] = None
+    ring: Optional[str] = None
 
     def spec(self, logical_axes: Sequence[str | None]) -> P:
         used: set[str] = set()
@@ -112,6 +119,37 @@ def current_rules() -> Optional[MeshRules]:
     return getattr(_CTX, "rules", None)
 
 
+@dataclass(frozen=True)
+class RingContext:
+    """Active context-parallelism site: attention should run as a ring over
+    ``mesh.shape[axis]`` sequence shards (see parallel/context.py)."""
+
+    mesh: Mesh
+    axis: str
+    cp: int
+
+
+def ring_context() -> Optional[RingContext]:
+    """Ring-attention context from the active rules, or None.
+
+    Returns None when no rules are active, the rules carry no ring axis, the
+    axis is only 1 wide, or the axis is already Manual in the current
+    shard_map region (the ring was applied by an enclosing transform)."""
+    rules = current_rules()
+    if rules is None or rules.mesh is None or not rules.ring:
+        return None
+    mesh = rules.mesh
+    if rules.ring not in mesh.axis_names:
+        return None
+    _, manual = current_mesh_context(mesh)
+    if rules.ring in manual:
+        return None
+    cp = int(mesh.shape[rules.ring])
+    if cp <= 1:
+        return None
+    return RingContext(mesh=mesh, axis=rules.ring, cp=cp)
+
+
 def lc(x, *logical_axes: str | None):
     """Logical sharding constraint on an activation (no-op outside a mesh).
 
@@ -135,7 +173,7 @@ def lc(x, *logical_axes: str | None):
             keep = tuple(t for t in targets if t not in manual)
             if keep:
                 filtered[k] = keep if len(keep) > 1 else keep[0]
-        rules = MeshRules(rules=filtered, mesh=mesh)
+        rules = MeshRules(rules=filtered, mesh=mesh, ring=rules.ring)
     spec = rules.spec(logical_axes)
     if all(s is None for s in spec):
         return x

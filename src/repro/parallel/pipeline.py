@@ -64,6 +64,11 @@ def pipeline_forward(
     axis: str = "pod",
     schedule: str = "gpipe",       # gpipe | 1f1b | interleaved
     num_virtual: int = 1,          # virtual stages per physical stage (interleaved)
+    seq_axis: str | None = None,   # cp axis carrying boundary seq shards, if
+                                   # the plan's strategy actually uses cp (a
+                                   # cp=1 plan batch-shards over the cp axis
+                                   # instead — constraining seq there would
+                                   # force an unmodeled reshard per boundary)
 ) -> jnp.ndarray:
     """Returns (M, mb, seq, D) outputs of the final (virtual) stage.
 
@@ -83,17 +88,21 @@ def pipeline_forward(
         h = x_micro
         for j in range(num_virtual):
             chunk = jax.tree.map(lambda a, j=j: a[:, j], stage_params)
-            h = _forward_round(chunk, h, stage_fn, mesh=mesh, axis=axis)
+            h = _forward_round(chunk, h, stage_fn, mesh=mesh, axis=axis,
+                               seq_axis=seq_axis)
         return h
-    return _forward_round(stage_params, x_micro, stage_fn, mesh=mesh, axis=axis)
+    return _forward_round(stage_params, x_micro, stage_fn, mesh=mesh,
+                          axis=axis, seq_axis=seq_axis)
 
 
-def _forward_round(stage_params, x_micro, stage_fn, *, mesh, axis):
+def _forward_round(stage_params, x_micro, stage_fn, *, mesh, axis,
+                   seq_axis=None):
     """One full traversal of the physical ring (lowering-dispatched)."""
     if compat.HAS_TOPLEVEL_SHARD_MAP:
         return _forward_shard_map(stage_params, x_micro, stage_fn,
                                   mesh=mesh, axis=axis)
-    return _forward_gspmd(stage_params, x_micro, stage_fn, mesh=mesh, axis=axis)
+    return _forward_gspmd(stage_params, x_micro, stage_fn, mesh=mesh,
+                          axis=axis, seq_axis=seq_axis)
 
 
 def _forward_shard_map(stage_params, x_micro, stage_fn, *, mesh, axis):
@@ -142,7 +151,8 @@ def _forward_shard_map(stage_params, x_micro, stage_fn, *, mesh, axis):
     return staged[-1]
 
 
-def _forward_gspmd(stage_params, x_micro, stage_fn, *, mesh, axis):
+def _forward_gspmd(stage_params, x_micro, stage_fn, *, mesh, axis,
+                   seq_axis=None):
     """Explicit-stage-dim lowering: vmap over stages, roll as the permute.
 
     ``jnp.roll`` wraps the last stage's output back to stage 0 (a real
@@ -154,7 +164,13 @@ def _forward_gspmd(stage_params, x_micro, stage_fn, *, mesh, axis):
     M = x_micro.shape[0]
     in_dtype = x_micro.dtype
     x_micro = x_micro.astype(jnp.float32)
-    stage_sharding = NamedSharding(mesh, P(axis))
+    # boundary blocks are (stage, mb, seq, D): stage on the pipe axis, seq on
+    # the caller's cp axis under context parallelism — each device then only
+    # holds (and permutes) a seq/cp slice of the stage boundary
+    if seq_axis is not None and (seq_axis not in mesh.axis_names
+                                 or x_micro.shape[2] % mesh.shape[seq_axis]):
+        seq_axis = None
+    stage_sharding = NamedSharding(mesh, P(axis, None, seq_axis))
     constrain = lambda a: jax.lax.with_sharding_constraint(a, stage_sharding)
     is_first = (jnp.arange(S) == 0)[:, None, None, None]
 

@@ -40,16 +40,22 @@ _TP_ACT_AXES = ("q_heads", "kv_heads", "ff", "vocab", "ssm_inner", "ssm_heads")
 def act_rules(plan: ExecutionPlan, strategy: LayerStrategy, mesh: Optional[Mesh]) -> MeshRules:
     dp = plan.dp_axes_for(strategy)
     tp = plan.tp_axis if strategy.tp > 1 else None
+    cp = plan.cp_axis if strategy.cp > 1 and "cp" in plan.mesh_axes else None
     rules: dict = {"batch": dp}
-    if strategy.sp and tp:
-        rules["seq"] = tp
+    seq_targets = tuple(t for t in (cp, tp if strategy.sp else None) if t)
+    if seq_targets:
+        # boundary seq: cp shards it everywhere, sp additionally over tp
+        rules["seq"] = seq_targets if len(seq_targets) > 1 else seq_targets[0]
+    if cp:
+        # inner (TP-region) seq stays cp-sharded — ring attention consumes it
+        rules["cp_seq"] = cp
     if tp:
         for ax in _TP_ACT_AXES:
             rules[ax] = tp
     if strategy.ep > 1:
         rules["experts"] = "data"
     rules["moe_capacity"] = dp          # spec() dedup resolves overlaps
-    return MeshRules(rules=rules, mesh=mesh)
+    return MeshRules(rules=rules, mesh=mesh, ring=cp)
 
 
 def param_rules(
@@ -59,7 +65,9 @@ def param_rules(
     *,
     zero_sharded: bool,        # True => apply the ZeRO dp-sharding layout
 ) -> MeshRules:
-    dp = plan.dp_axes_for(strategy)
+    # params replicate over cp (only activations shard their seq dim), so the
+    # ZeRO layout may spread states over dp·cp — state_axes_for adds "cp"
+    dp = plan.state_axes_for(strategy)
     rules: dict = {}
     if strategy.tp > 1:
         for ax in _TP_PARAM_AXES:

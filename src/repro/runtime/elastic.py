@@ -29,20 +29,25 @@ class ElasticEvent:
 
 
 def surviving_mesh(devices: int, *, model_axis: int = 16,
-                   pp: int = 1) -> tuple[tuple, tuple]:
-    """Largest mesh using <= devices with the given model axis and pipeline
-    degree (pp > 1 adds a leading "pod" axis carrying the stages).
+                   pp: int = 1, cp: int = 1) -> tuple[tuple, tuple]:
+    """Largest mesh using <= devices with the given model axis, pipeline
+    degree (pp > 1 adds a leading "pod" axis carrying the stages) and
+    context-parallel degree (cp > 1 adds a "cp" axis for ring attention).
 
     TPU slices fail in whole hosts; we conservatively drop to the next
     power-of-two data dimension so the mesh stays rectangular."""
-    model_axis = min(model_axis, max(devices // pp, 1))
-    data = devices // (pp * model_axis)
+    model_axis = min(model_axis, max(devices // (pp * cp), 1))
+    data = devices // (pp * cp * model_axis)
     p = 1
     while p * 2 <= data:
         p *= 2
+    shape: tuple = (p, model_axis)
+    axes: tuple = ("data", "model")
+    if cp > 1:
+        shape, axes = (cp,) + shape, ("cp",) + axes
     if pp > 1:
-        return (pp, p, model_axis), ("pod", "data", "model")
-    return (p, model_axis), ("data", "model")
+        shape, axes = (pp,) + shape, ("pod",) + axes
+    return shape, axes
 
 
 def replan_pp_candidates(cfg: ModelConfig, devices: int, *,
@@ -61,6 +66,22 @@ def replan_pp_candidates(cfg: ModelConfig, devices: int, *,
     return out
 
 
+def replan_cp_candidates(cfg: ModelConfig, seq_len: int, devices: int, *,
+                         max_cp: int = 4) -> list[int]:
+    """Context-parallel degrees a replan may retain: ring attention is
+    implemented for dense attention stacks, needs the zig-zag split to
+    divide the sequence, and cannot pay for itself below a few thousand
+    tokens — short-context replans skip the extra searches entirely."""
+    out = [1]
+    if cfg.family != "dense" or seq_len < 4096:
+        return out
+    cp = 2
+    while cp <= max_cp and devices // cp >= 1 and seq_len % (2 * cp) == 0:
+        out.append(cp)
+        cp *= 2
+    return out
+
+
 def replan(
     cfg: ModelConfig,
     event: ElasticEvent,
@@ -71,29 +92,32 @@ def replan(
     arch: str = "",
     shape_name: str = "",
 ) -> ExecutionPlan:
-    """Re-search the full (pp × schedule × strategy) space for the surviving
-    device count and return the fastest feasible plan.
+    """Re-search the full (pp × cp × schedule × strategy) space for the
+    surviving device count and return the fastest feasible plan.
 
-    Historically this pinned ``pp_options=[1]``, so a run that *needed*
-    pipeline parallelism to fit (or was using it when the membership changed)
+    Historically this pinned ``pp_options=[1]`` (and, before context
+    parallelism existed, implicitly cp=1), so a run that *needed* pipeline or
+    context parallelism to fit (or was using it when the membership changed)
     could never get it back after a failure — the replanned "optimal" plan
-    was either infeasible or strictly worse.  Each candidate pp gets its own
-    pod-axis mesh; schedules are enumerated by the engine (schedule_space)."""
+    was either infeasible or strictly worse.  Each candidate (pp, cp) gets
+    its own pod/cp-axis mesh; schedules are enumerated by the engine
+    (schedule_space), cp degrees by the mesh's cp axis."""
     best: Optional[SearchResult] = None
     best_pp1: Optional[SearchResult] = None
     for pp in replan_pp_candidates(cfg, event.new_devices):
-        mesh_shape, mesh_axes = surviving_mesh(event.new_devices, pp=pp)
-        engine = SearchEngine(cfg, dataclasses.replace(
-            cluster, chips=int(math.prod(mesh_shape))))
-        res = engine.search(seq_len, global_batch, mesh_shape=mesh_shape,
-                            mesh_axes=mesh_axes, pp_options=[pp],
-                            arch=arch, shape_name=shape_name)
-        if pp == 1:
-            best_pp1 = res
-        if not res.feasible:
-            continue
-        if best is None or res.plan.predicted_step_time < best.plan.predicted_step_time:
-            best = res
+        for cp in replan_cp_candidates(cfg, seq_len, event.new_devices // pp):
+            mesh_shape, mesh_axes = surviving_mesh(event.new_devices, pp=pp, cp=cp)
+            engine = SearchEngine(cfg, dataclasses.replace(
+                cluster, chips=int(math.prod(mesh_shape))))
+            res = engine.search(seq_len, global_batch, mesh_shape=mesh_shape,
+                                mesh_axes=mesh_axes, pp_options=[pp],
+                                arch=arch, shape_name=shape_name)
+            if pp == 1 and cp == 1:
+                best_pp1 = res
+            if not res.feasible:
+                continue
+            if best is None or res.plan.predicted_step_time < best.plan.predicted_step_time:
+                best = res
     res = best if best is not None else best_pp1
     plan = res.plan
     plan.notes += f" | elastic replan: {event.old_devices}->{event.new_devices} ({event.reason})"

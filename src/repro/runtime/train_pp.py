@@ -177,7 +177,10 @@ class PipelineTrainer:
         outs = pipeline_forward(params["blocks"], x_micro, stage_fn,
                                 mesh=self.mesh, axis=self.pipe_axis,
                                 schedule=self.schedule,
-                                num_virtual=self.interleave)
+                                num_virtual=self.interleave,
+                                # context parallelism: boundary blocks shrink
+                                # by cp — only when the plan's strategy rings
+                                seq_axis="cp" if self.strategy.cp > 1 else None)
         h = outs.reshape(B, seq, D)
         h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
         logits = emb_lib.lm_head(params["embed"], h, cfg)

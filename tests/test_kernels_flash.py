@@ -43,6 +43,52 @@ def test_flash_block_size_invariance(rng):
     np.testing.assert_allclose(np.asarray(base), np.asarray(alt), atol=2e-5, rtol=2e-5)
 
 
+def test_flash_positional_masking_matches_iota(rng):
+    """Explicit global positions (context-parallel shards) must reproduce the
+    iota causal mask when positions are the identity, and must be exact under
+    a zig-zag permutation of the sequence."""
+    from repro.parallel.context import zigzag_permutation
+
+    B, S, H, hd = 1, 256, 2, 32
+    ks = jax.random.split(rng, 3)
+    q, k, v = (jax.random.normal(ks[i], (B, S, H, hd)) for i in range(3))
+    ref = attention_reference(q, k, v, causal=True)
+    pos = jnp.arange(S, dtype=jnp.int32)
+    out = flash_attention_fwd(q, k, v, causal=True, q_pos=pos, k_pos=pos,
+                              interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=1e-5, rtol=1e-5)
+    perm = jnp.asarray(zigzag_permutation(S, 4), jnp.int32)
+    outz = flash_attention_fwd(q[:, perm], k[:, perm], v[:, perm], causal=True,
+                               q_pos=perm, k_pos=perm, interpret=True)
+    np.testing.assert_allclose(np.asarray(outz), np.asarray(ref[:, perm]),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_flash_residuals_merge_partials(rng):
+    """(m, l) residual outputs let two kv-shard partials merge into the full
+    softmax — the device-level merge ring attention runs."""
+    from repro.parallel.context import merge_partials
+
+    B, S, H, hd = 1, 256, 2, 32
+    ks = jax.random.split(rng, 3)
+    q, k, v = (jax.random.normal(ks[i], (B, S, H, hd)) for i in range(3))
+    ref = attention_reference(q, k, v, causal=True)
+    pos = jnp.arange(S, dtype=jnp.int32)
+    half = S // 2
+    o1, m1, l1 = flash_attention_fwd(q, k[:, :half], v[:, :half], causal=True,
+                                     q_pos=pos, k_pos=pos[:half],
+                                     return_residuals=True, interpret=True)
+    o2, m2, l2 = flash_attention_fwd(q, k[:, half:], v[:, half:], causal=True,
+                                     q_pos=pos, k_pos=pos[half:],
+                                     return_residuals=True, interpret=True)
+    om, _, _ = merge_partials(jnp.moveaxis(o1, 1, 2).astype(jnp.float32), m1, l1,
+                              jnp.moveaxis(o2, 1, 2).astype(jnp.float32), m2, l2)
+    np.testing.assert_allclose(np.asarray(jnp.moveaxis(om, 1, 2)),
+                               np.asarray(ref, np.float32),
+                               atol=1e-5, rtol=1e-5)
+
+
 def test_flash_custom_vjp_grads(rng):
     """ops.flash_attention backward (recompute via chunked ref) vs autodiff
     through the dense reference."""
