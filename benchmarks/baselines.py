@@ -13,10 +13,7 @@ Each baseline returns its best (step_time, config) over its own expert grid:
 from __future__ import annotations
 
 import itertools
-import math
 
-from repro.configs.registry import ModelConfig
-from repro.core.cluster import ClusterSpec
 from repro.core.search import evaluate_uniform
 from repro.core.strategy import LayerStrategy
 

@@ -1,0 +1,188 @@
+"""Elastic-resize benchmark: in-memory state migration vs checkpoint
+round trip across shrink (16 -> 12 -> 8) and grow (8 -> 16) events.
+
+Each event runs the *real* elastic flow — ``replan_and_diff`` re-searches
+the plan for the surviving devices, then the live state moves onto the
+replanned mesh twice from the same source state: once through
+``resize.migrate`` (pure ``device_put`` resharding) and once through
+``resize.migrate_via_checkpoint`` (serialize + compress + disk + restore).
+The two results are compared leaf-by-leaf for bitwise equality, and training
+continues from the migrated state so a bad placement cannot hide.
+
+``--check`` (the CI smoke, driven by ``benchmarks/run.py --check``) asserts
+for every event that (a) both paths produce bitwise identical state and
+(b) the in-memory path is faster than the checkpoint path.
+
+jax pins its device count at first backend init and the benchmark harness
+may already have initialized it, so the measurement runs in a subprocess
+with ``XLA_FLAGS=--xla_force_host_platform_device_count=16`` (same pattern
+as tests/_mp.py).
+
+Usage:
+  PYTHONPATH=src python benchmarks/elastic_resize.py           # table
+  PYTHONPATH=src python benchmarks/elastic_resize.py --check   # CI smoke
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import pathlib
+import subprocess
+import sys
+
+EVENTS = ((16, 12), (12, 8), (8, 16))
+N_DEVICES = 16
+_MARKER = "ELASTIC_RESIZE_ROWS:"
+
+SRC = str(pathlib.Path(__file__).resolve().parents[1] / "src")
+
+
+# --------------------------------------------------------------------------
+# in-subprocess measurement
+# --------------------------------------------------------------------------
+
+def worker(seq: int = 16, batch: int = 16, steps_between: int = 1) -> list[dict]:
+    """Measure every event; must run under a 16-device pool."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.configs.registry import get_config
+    from repro.launch import mesh as mesh_lib
+    from repro.models import build_model
+    from repro.runtime import resize
+    from repro.runtime.data import SyntheticDataset
+    from repro.runtime.elastic import ElasticEvent, replan, replan_and_diff
+
+    assert jax.device_count() >= N_DEVICES, jax.device_count()
+    cfg = get_config("llama3.2-1b").reduced()
+    model = build_model(cfg)
+    ds = SyntheticDataset(cfg, seq_len=seq, global_batch=batch)
+
+    def build(plan):
+        mesh = mesh_lib.make_mesh(plan.mesh_shape, plan.mesh_axes,
+                                  devices=jax.devices()[:plan.num_devices])
+        return resize.make_trainer(model, plan, mesh)
+
+    def bitwise_equal(tree_a, tree_b) -> bool:
+        la, lb = jax.tree.leaves(tree_a), jax.tree.leaves(tree_b)
+        return len(la) == len(lb) and all(
+            np.array_equal(np.asarray(jax.device_get(a)),
+                           np.asarray(jax.device_get(b)))
+            for a, b in zip(la, lb))
+
+    plan = replan(cfg, ElasticEvent(N_DEVICES, N_DEVICES, "init"), seq, batch)
+    hp = build(plan)
+    params = hp.init_params(jax.random.PRNGKey(0))
+    opt = hp.init_opt_state(params)
+    step_fn = hp.jit_train_step(donate=False)
+    step = 0
+    for _ in range(steps_between):        # real (nonzero) optimizer state
+        batch_np = {k: jnp.asarray(v) for k, v in ds.batch(step).items()}
+        params, opt, _ = step_fn(params, opt, batch_np)
+        step += 1
+
+    # warmup: one throwaway migration per path so one-time costs (device_put
+    # machinery, codec imports, temp-dir setup) don't land on the first event
+    resize.migrate(hp, hp, params, opt)
+    resize.migrate_via_checkpoint(hp, hp, params, opt, step=step)
+
+    rows = []
+    for old_n, new_n in EVENTS:
+        event = ElasticEvent(old_devices=old_n, new_devices=new_n,
+                             reason="benchmark")
+        new_plan, spec = replan_and_diff(cfg, event, seq, batch, plan)
+        new_hp = build(new_plan)
+        carry = resize.CarryState(step=step, samples_seen=step * batch)
+        p_mem, o_mem, carry, rep_mem = resize.migrate(hp, new_hp, params, opt, carry)
+        p_ck, o_ck, _, rep_ck = resize.migrate_via_checkpoint(
+            hp, new_hp, params, opt, carry, step=step)
+        equal = (bitwise_equal(resize.canonical_state(new_hp, p_mem, o_mem)[0],
+                               resize.canonical_state(new_hp, p_ck, o_ck)[0])
+                 and bitwise_equal(o_mem.m, o_ck.m)
+                 and bitwise_equal(o_mem.v, o_ck.v))
+        rows.append({
+            "event": f"{old_n}->{new_n}",
+            "migrate_s": rep_mem.seconds,
+            "ckpt_s": rep_ck.seconds,
+            "speedup": rep_ck.seconds / max(rep_mem.seconds, 1e-9),
+            "mb": rep_mem.bytes_moved / 1e6,
+            "bitwise_equal": equal,
+            "spec": spec.summary(),
+        })
+        # continue training from the migrated state — a bad placement
+        # surfaces here as a crash or a diverged loss, not silently
+        hp, plan, params, opt = new_hp, new_plan, p_mem, o_mem
+        step_fn = hp.jit_train_step(donate=False)
+        for _ in range(steps_between):
+            batch_np = {k: jnp.asarray(v) for k, v in ds.batch(step).items()}
+            params, opt, metrics = step_fn(params, opt, batch_np)
+            step += 1
+        rows[-1]["loss_after"] = float(metrics["loss"])
+    return rows
+
+
+def run() -> list[dict]:
+    """Spawn the 16-device worker subprocess and return its rows."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={N_DEVICES}"
+    env["JAX_PLATFORMS"] = env.get("JAX_PLATFORMS", "cpu")
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    code = (
+        "import json, runpy, sys; "
+        f"mod = runpy.run_path({str(pathlib.Path(__file__).resolve())!r}, "
+        "run_name='bench_elastic_resize'); "
+        f"print({_MARKER!r} + json.dumps(mod['worker']()))"
+    )
+    proc = subprocess.run([sys.executable, "-c", code], env=env,
+                          capture_output=True, text=True, timeout=1200)
+    if proc.returncode != 0:
+        raise RuntimeError(f"elastic_resize worker failed (rc={proc.returncode})\n"
+                           f"stdout:\n{proc.stdout[-2000:]}\n"
+                           f"stderr:\n{proc.stderr[-4000:]}")
+    for line in proc.stdout.splitlines():
+        if line.startswith(_MARKER):
+            return json.loads(line[len(_MARKER):])
+    raise RuntimeError(f"no result marker in worker output:\n{proc.stdout[-2000:]}")
+
+
+def check(verbose: bool = True) -> list[dict]:
+    """CI smoke: every shrink/grow event must migrate in memory faster than
+    the checkpoint round trip, with bitwise identical state."""
+    rows = run()
+    assert [r["event"] for r in rows] == [f"{a}->{b}" for a, b in EVENTS], rows
+    for r in rows:
+        assert r["bitwise_equal"], (
+            f"{r['event']}: in-memory migration diverged from the "
+            f"checkpoint-restore oracle ({r['spec']})")
+        assert r["migrate_s"] < r["ckpt_s"], (
+            f"{r['event']}: in-memory migration ({r['migrate_s']*1e3:.1f} ms) "
+            f"did not beat the checkpoint path ({r['ckpt_s']*1e3:.1f} ms)")
+        assert r["loss_after"] == r["loss_after"], f"{r['event']}: NaN loss"
+    if verbose:
+        for r in rows:
+            print(f"OK: {r['event']}: {r['migrate_s']*1e3:.1f} ms in-memory vs "
+                  f"{r['ckpt_s']*1e3:.1f} ms checkpoint "
+                  f"({r['speedup']:.1f}x, {r['mb']:.1f} MB, bitwise equal)")
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--check", action="store_true",
+                    help="CI smoke: assert in-memory migration beats the "
+                         "checkpoint path with bitwise-identical state")
+    args = ap.parse_args()
+    if args.check:
+        check()
+        return
+    print("event,migrate_ms,ckpt_ms,speedup,mb,bitwise_equal,loss_after,spec")
+    for r in run():
+        print(f"{r['event']},{r['migrate_s']*1e3:.2f},{r['ckpt_s']*1e3:.2f},"
+              f"{r['speedup']:.1f},{r['mb']:.1f},{r['bitwise_equal']},"
+              f"{r['loss_after']:.4f},\"{r['spec']}\"")
+
+
+if __name__ == "__main__":
+    main()

@@ -7,7 +7,6 @@ for inflexible baselines; Galvatron is never worse than the best baseline
 """
 from __future__ import annotations
 
-import dataclasses
 
 from benchmarks.baselines import BASELINES
 from repro.configs.registry import get_config

@@ -35,7 +35,6 @@ def _analytic_step_flops(cfg, spec, plan: dict, *, causal_frac: float = 1.0) -> 
     computes the full S² grid => causal_frac=1.0; the causal-skip §Perf
     variant passes the triangular fraction)."""
     from repro.core.profiler_model import profile_model
-    from repro.core.strategy import LayerStrategy
 
     samples = spec.global_batch
     if spec.kind == "train":

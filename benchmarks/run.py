@@ -7,15 +7,89 @@ Prints ``name,us_per_call,derived`` CSV rows per the harness contract.
   kernels    — kernel reference microbenches
   pipeline   — schedule comparison (gpipe/1f1b/interleaved bubble + in-flight)
   cp         — context-parallel ring-attention memory/step-time sweep
+  elastic    — live resize: in-memory migration vs checkpoint round trip
   roofline   — 3-term roofline table from dry-run artifacts (if present)
+
+``--check`` is the single CI smoke entrypoint: it *discovers* every suite
+module in this directory that exposes a ``check()`` callable and runs them
+all.  Registration is automatic — a new suite that defines ``check()`` can
+never again silently miss CI (PR 3 found the PR 2 suite had never been
+registered here; discovery makes that class of bug structurally impossible).
 """
 from __future__ import annotations
 
+import argparse
+import importlib
+import pathlib
+import pkgutil
 import sys
 import time
+import traceback
+
+# run.py is invoked both as ``python benchmarks/run.py`` (script dir on
+# sys.path, repo root not) and as ``python -m benchmarks.run`` — make the
+# ``benchmarks`` package importable either way.
+_REPO_ROOT = str(pathlib.Path(__file__).resolve().parent.parent)
+if _REPO_ROOT not in sys.path:
+    sys.path.insert(0, _REPO_ROOT)
+
+
+def discover_suites() -> tuple[dict[str, object], list[str]]:
+    """({module_name: module} for every benchmarks/ module with a check(),
+    [module names that failed to import]).  Import failures are surfaced,
+    not swallowed — one broken suite module must not hide the others."""
+    pkg_dir = pathlib.Path(__file__).resolve().parent
+    suites: dict[str, object] = {}
+    broken: list[str] = []
+    for info in sorted(pkgutil.iter_modules([str(pkg_dir)]),
+                       key=lambda m: m.name):
+        if info.name == "run":
+            continue
+        try:
+            mod = importlib.import_module(f"benchmarks.{info.name}")
+        except Exception:
+            broken.append(info.name)
+            traceback.print_exc()
+            continue
+        if callable(getattr(mod, "check", None)):
+            suites[info.name] = mod
+    return suites, broken
+
+
+def run_checks() -> int:
+    """Run every discovered suite's CI smoke; returns the failure count."""
+    suites, broken = discover_suites()
+    print(f"running {len(suites)} registered CI smokes: "
+          f"{', '.join(suites)}", flush=True)
+    failures = len(broken)
+    for name in broken:
+        print(f"FAIL {name} (module failed to import)", flush=True)
+    if not suites:
+        print("FAIL: no benchmark suite with a check() was discovered — "
+              "the smoke entrypoint would pass vacuously", flush=True)
+        return failures + 1
+    for name, mod in suites.items():
+        t0 = time.perf_counter()
+        try:
+            mod.check()
+            print(f"PASS {name} ({time.perf_counter() - t0:.1f}s)", flush=True)
+        except Exception:
+            failures += 1
+            traceback.print_exc()
+            print(f"FAIL {name} ({time.perf_counter() - t0:.1f}s)", flush=True)
+    return failures
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--check", action="store_true",
+                    help="CI smoke entrypoint: discover + run every suite's "
+                         "check() (pipeline_schedules, context_parallel, "
+                         "elastic_resize, ...)")
+    args = ap.parse_args()
+    if args.check:
+        sys.exit(1 if run_checks() else 0)
+
     rows: list[tuple[str, float, str]] = []
 
     # ---- Fig. 3 speedup ---------------------------------------------------
@@ -74,6 +148,19 @@ def main() -> None:
                 f"_feasible={r['feasible']}"))
     except Exception as e:  # noqa: BLE001
         rows.append(("cp.skipped", 0.0, type(e).__name__))
+
+    # ---- elastic resize (live migration vs checkpoint round trip) ------------
+    try:
+        from benchmarks import elastic_resize
+
+        for r in elastic_resize.run():
+            rows.append((
+                f"elastic.{r['event'].replace('->', 'to')}",
+                r["migrate_s"] * 1e6,
+                f"ckpt_ms={r['ckpt_s']*1e3:.1f}_speedup={r['speedup']:.1f}x"
+                f"_bitwise={r['bitwise_equal']}"))
+    except Exception as e:  # noqa: BLE001
+        rows.append(("elastic.skipped", 0.0, type(e).__name__))
 
     # ---- DP ablation (paper's core algorithm vs cheaper selectors) -----------
     try:

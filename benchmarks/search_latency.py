@@ -19,8 +19,8 @@ def run() -> list[dict]:
                          pp_options=[1], arch=arch, shape_name="train_4k")
         dt = time.perf_counter() - t0
         t0 = time.perf_counter()
-        res_free = eng.search(4096, 256, total_devices=256, mesh_constrained=False,
-                              mesh_shape=(256,), mesh_axes=("data",), arch=arch)
+        eng.search(4096, 256, total_devices=256, mesh_constrained=False,
+                   mesh_shape=(256,), mesh_axes=("data",), arch=arch)
         dt_free = time.perf_counter() - t0
         rows.append({"arch": arch, "mesh_constrained_s": dt, "free_s": dt_free,
                      "combos": res.evaluated, "feasible": res.feasible,

@@ -9,7 +9,6 @@ it (there are no learnable correlations beyond the unigram distribution).
     PYTHONPATH=src python examples/train_100m.py [--steps 300]
 """
 import argparse
-import sys
 
 from repro.launch import train as train_driver
 

@@ -36,7 +36,7 @@ import threading
 from typing import Any, Callable, Iterable, Optional
 
 import jax
-from jax.sharding import Mesh, NamedSharding, PartitionSpec
+from jax.sharding import Mesh, NamedSharding, PartitionSpec  # noqa: F401  (re-exported)
 
 P = PartitionSpec
 
@@ -79,18 +79,30 @@ HAS_MAKE_MESH: bool = hasattr(jax, "make_mesh")
 # mesh construction
 # ---------------------------------------------------------------------------
 
-def make_mesh(shape: Iterable[int], axes: Iterable[str]) -> Mesh:
-    """``jax.make_mesh`` when available; manual devices-reshape otherwise."""
+def make_mesh(shape: Iterable[int], axes: Iterable[str],
+              devices: Optional[Iterable[Any]] = None) -> Mesh:
+    """``jax.make_mesh`` when available; manual devices-reshape otherwise.
+
+    ``devices`` restricts the mesh to an explicit device subset — the live
+    elastic-resize path (runtime/resize.py) builds the shrunk mesh over the
+    surviving devices while the departed ones idle.
+    """
     shape, axes = tuple(shape), tuple(axes)
+    dev_list = list(devices) if devices is not None else None
     if HAS_MAKE_MESH:
-        return jax.make_mesh(shape, axes)
+        if dev_list is None:
+            return jax.make_mesh(shape, axes)
+        try:
+            return jax.make_mesh(shape, axes, devices=dev_list)
+        except TypeError:  # pragma: no cover - jax.make_mesh without devices=
+            pass
     import numpy as np
 
     n = 1
     for s in shape:
         n *= s
-    devices = np.asarray(jax.devices()[:n]).reshape(shape)
-    return Mesh(devices, axes)
+    pool = dev_list if dev_list is not None else jax.devices()
+    return Mesh(np.asarray(pool[:n]).reshape(shape), axes)
 
 
 def abstract_mesh(shape: Iterable[int], axes: Iterable[str]):

@@ -15,9 +15,7 @@ interleaved holds a pp·(1+(v-1)/v) warm-up term.  Shared-weight groups
 """
 from __future__ import annotations
 
-import dataclasses
 
-from repro.core.cluster import ClusterSpec
 from repro.core.cost_model import CostEnv
 from repro.core.profiler_model import LayerProfile, ModelProfile
 from repro.core.strategy import LayerStrategy

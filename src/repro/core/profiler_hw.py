@@ -10,9 +10,7 @@ the paper's profiler runs on a real cluster, demonstrated on CPU in tests.
 from __future__ import annotations
 
 import dataclasses
-import math
 import time
-from typing import Callable
 
 import numpy as np
 

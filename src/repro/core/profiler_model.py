@@ -85,7 +85,6 @@ class ModelProfile:
         n = self.total_params()
         if cfg.num_experts:
             active = 0
-            seen = set()
             for lp in self.layers:
                 dense = lp.param_count - lp.expert_param_count
                 active += dense + lp.expert_param_count * cfg.experts_per_token / cfg.num_experts
@@ -239,7 +238,6 @@ def profile_model(cfg: ModelConfig, seq_len: int, *, causal_frac: float = 1.0) -
         for i in range(cfg.num_layers):
             layers.append(_mamba_block(cfg, S, f"layer{i}"))
     elif cfg.family == "hybrid":
-        n_apps = cfg.num_layers // cfg.attn_every
         for i in range(cfg.num_layers):
             layers.append(_mamba_block(cfg, S, f"mamba{i}"))
             if (i + 1) % cfg.attn_every == 0:

@@ -11,7 +11,6 @@ the paper's arbitrary power-of-two search (used by the Fig.-3 benchmark).
 from __future__ import annotations
 
 import dataclasses
-import math
 import time
 from typing import Optional
 
@@ -421,7 +420,6 @@ def serving_plan(cfg: ModelConfig, *, seq_len: int, batch: int,
     parameters would not fit replicated; cache sharded per cache_spec_tree."""
     tp = mesh_shape[mesh_axes.index("model")]
     devices = int(np.prod(mesh_shape))
-    dp = devices // tp
     profile = profile_model(cfg, min(seq_len, 4096))
     param_bytes = 2.0 * profile.total_params()
     cache = mm.kv_cache_bytes(cfg, batch, seq_len)

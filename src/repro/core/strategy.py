@@ -11,7 +11,6 @@ from __future__ import annotations
 
 import dataclasses
 import json
-from typing import Optional
 
 REMAT_POLICIES = ("none", "selective", "full")
 

@@ -25,7 +25,6 @@ Validated with ``interpret=True`` on CPU against ``ref.attention_reference``.
 from __future__ import annotations
 
 import functools
-import math
 
 import jax
 import jax.numpy as jnp

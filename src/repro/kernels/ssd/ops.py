@@ -7,7 +7,6 @@
 """
 from __future__ import annotations
 
-import jax.numpy as jnp
 
 from repro.kernels.ssd import ref as _ref
 

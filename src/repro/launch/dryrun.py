@@ -29,7 +29,6 @@ import pathlib
 import time
 import traceback
 
-import jax
 import numpy as np
 
 from repro.configs.registry import ARCH_IDS, get_config

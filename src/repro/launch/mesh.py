@@ -24,8 +24,10 @@ def make_production_mesh(*, multi_pod: bool = False):
     return compat.make_mesh(shape, axes)
 
 
-def make_mesh(shape, axes):
-    return compat.make_mesh(tuple(shape), tuple(axes))
+def make_mesh(shape, axes, devices=None):
+    """Arbitrary mesh; ``devices`` pins an explicit device subset (elastic
+    shrink events leave the departed devices out of the new mesh)."""
+    return compat.make_mesh(tuple(shape), tuple(axes), devices=devices)
 
 
 def train_mesh_spec(n_devices: int, *, pp: int = 1, cp: int = 1) -> tuple[tuple, tuple]:
@@ -46,6 +48,6 @@ def train_mesh_spec(n_devices: int, *, pp: int = 1, cp: int = 1) -> tuple[tuple,
     return shape, axes
 
 
-def make_train_mesh(n_devices: int, *, pp: int = 1, cp: int = 1):
+def make_train_mesh(n_devices: int, *, pp: int = 1, cp: int = 1, devices=None):
     shape, axes = train_mesh_spec(n_devices, pp=pp, cp=cp)
-    return compat.make_mesh(shape, axes)
+    return compat.make_mesh(shape, axes, devices=devices)

@@ -3,19 +3,27 @@
 CPU-scale by default (reduced or custom-dim configs); the same driver drives
 a real pod by passing the production mesh.  Implements the paper's Fig. 2
 user workflow plus the scale features: periodic atomic checkpoints, restart
-from the latest step, and an elastic-event simulation that re-searches the
-plan mid-run (--simulate-failure-at).
+from the latest step, and **live elastic resize** — ``--simulate-failure-at-step``
+fires membership changes mid-run, the engine re-searches the plan for the
+surviving devices, and the in-memory migration path (runtime/resize.py)
+reshards params/opt-state/carry onto the replanned mesh without a restart
+(``--elastic-mode checkpoint`` keeps the save/restore fallback path for
+comparison — the two are bitwise equivalent).
 
 Examples:
   PYTHONPATH=src python -m repro.launch.train --arch llama3.2-1b --reduced \
       --steps 20 --seq 64 --batch 8
   PYTHONPATH=src python -m repro.launch.train --preset 100m --steps 300 \
       --seq 256 --batch 16 --ckpt-dir /tmp/ckpt
+  # live shrink 8->4 at step 3, grow back 4->8 at step 6:
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+  PYTHONPATH=src python -m repro.launch.train --arch llama3.2-1b --reduced \
+      --steps 10 --seq 32 --batch 8 \
+      --simulate-failure-at-step 3,6 --resize-to 4,8
 """
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import time
 
 import jax
@@ -28,8 +36,9 @@ from repro.launch import mesh as mesh_lib
 from repro.core.strategy import ExecutionPlan, LayerStrategy
 from repro.models import build_model
 from repro.runtime import checkpoint as ckpt_lib
+from repro.runtime import resize as resize_lib
 from repro.runtime.data import SyntheticDataset
-from repro.runtime.elastic import ElasticEvent, replan
+from repro.runtime.elastic import ElasticEvent, replan, replan_and_diff
 from repro.runtime.train import construct_hybrid_parallel_model
 from repro.runtime.train_pp import PipelineTrainer
 
@@ -44,6 +53,68 @@ def resolve_cfg(args) -> ModelConfig:
         return PRESET_100M
     cfg = get_config(args.arch)
     return cfg.reduced() if args.reduced else cfg
+
+
+def _int_list(text: str) -> list[int]:
+    return [int(tok) for tok in str(text).split(",") if tok.strip()]
+
+
+def _parse_events(args, n_dev: int) -> list[tuple[int, int]]:
+    """[(fire_step, new_device_count), ...] from --simulate-failure-at-step /
+    --resize-to, validated against the live device pool."""
+    steps = _int_list(args.simulate_failure_at_step or "")
+    sizes = _int_list(args.resize_to or "")
+    if not steps:
+        if sizes:
+            raise SystemExit("--resize-to needs --simulate-failure-at-step "
+                             "entries naming when each resize fires")
+        return []
+    if sizes and len(sizes) != len(steps):
+        raise SystemExit("--resize-to needs one device count per "
+                         "--simulate-failure-at-step entry")
+    events = list(zip(steps, sizes)) if sizes else [(s, 0) for s in steps]
+    if any(b <= a for a, b in zip(steps, steps[1:])):
+        raise SystemExit("--simulate-failure-at-step entries must be "
+                         "strictly increasing")
+    for _, n in events:
+        if sizes and n < 1:
+            raise SystemExit(f"--resize-to {n} is not a device count")
+        if n > n_dev:
+            raise SystemExit(f"--resize-to {n} exceeds the live device pool "
+                             f"({n_dev}); grow events can only reuse devices "
+                             "this process already sees")
+    return events
+
+
+def _build_runtime(model, plan: ExecutionPlan):
+    """(trainer, mesh) realizing ``plan`` on a prefix of the live devices —
+    a shrunk plan leaves the departed devices out of the mesh."""
+    mesh = mesh_lib.make_mesh(plan.mesh_shape, plan.mesh_axes,
+                              devices=jax.devices()[:plan.num_devices])
+    return resize_lib.make_trainer(model, plan, mesh), mesh
+
+
+def _apply_resize(cfg, args, event: ElasticEvent, model, hp, plan, params, opt,
+                  carry: "resize_lib.CarryState"):
+    """Replan for the survivors and migrate live state onto the new mesh.
+    Returns the rebuilt (hp, plan, mesh, params, opt, carry, step_fn); the
+    returned carry is the authoritative resume point for the loop."""
+    new_plan, spec = replan_and_diff(cfg, event, args.seq, args.batch, plan,
+                                     arch=cfg.name)
+    print(f"   new plan: {new_plan.default_strategy.short()} "
+          f"ga={new_plan.grad_accum} mesh={new_plan.mesh_shape} "
+          f"({new_plan.notes.split('|')[-1].strip()})")
+    print(f"   migration spec: {spec.summary()}")
+    new_hp, new_mesh = _build_runtime(model, new_plan)
+    if args.elastic_mode == "checkpoint":
+        params, opt, carry, report = resize_lib.migrate_via_checkpoint(
+            hp, new_hp, params, opt, carry, step=carry.step)
+    else:
+        params, opt, carry, report = resize_lib.migrate(
+            hp, new_hp, params, opt, carry)
+    print(f"   {report.summary()}")
+    return (new_hp, new_plan, new_mesh, params, opt, carry,
+            new_hp.jit_train_step(donate=False))
 
 
 def main(argv=None):
@@ -70,13 +141,31 @@ def main(argv=None):
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--resume", action="store_true")
-    ap.add_argument("--simulate-failure-at", type=int, default=0)
+    ap.add_argument("--simulate-failure-at-step", "--simulate-failure-at",
+                    dest="simulate_failure_at_step", default="",
+                    help="comma-separated steps at which to fire a simulated "
+                         "membership change (with --resize-to: live resize; "
+                         "without: legacy replan-and-print)")
+    ap.add_argument("--resize-to", default="",
+                    help="comma-separated surviving device counts, one per "
+                         "--simulate-failure-at-step entry; each event "
+                         "replans + migrates live state onto the new mesh")
+    ap.add_argument("--elastic-mode", default="live",
+                    choices=["live", "checkpoint"],
+                    help="how a resize event moves state: 'live' = in-memory "
+                         "device_put migration; 'checkpoint' = save/restore "
+                         "round trip (the fallback path / equivalence oracle)")
+    ap.add_argument("--digest", action="store_true",
+                    help="print a deterministic state digest at the end "
+                         "(params/opt sums + final loss) — lets two runs be "
+                         "compared for bitwise-equivalent training state")
     ap.add_argument("--log-every", type=int, default=10)
     args = ap.parse_args(argv)
 
     cfg = resolve_cfg(args)
     model = build_model(cfg)
     n_dev = jax.device_count()
+    events = _parse_events(args, n_dev)
 
     # ---- plan: search the engine even at CPU scale (paper workflow) ------
     if args.cp > 1:
@@ -89,12 +178,16 @@ def main(argv=None):
     if n_dev == 1:
         if args.cp > 1:
             print(f"warning: --cp {args.cp} ignored on a single device")
+        if any(n for _, n in events):
+            raise SystemExit("--resize-to needs a multi-device pool "
+                             "(set XLA_FLAGS=--xla_force_host_platform_device_count)")
         strat = LayerStrategy(remat=args.remat or "none")
         plan = ExecutionPlan(arch=cfg.name, shape="train", mesh_axes=("data",),
                              mesh_shape=(1,), grad_accum=max(args.grad_accum, 1),
                              layer_strategies=[strat] * cfg.num_layers,
                              default_strategy=strat)
         mesh = None
+        hp = construct_hybrid_parallel_model(model, plan, mesh)
     else:
         # staged/ring run: pod axis carries the pipeline, cp axis the
         # ring-attention sequence shards; schedule/cp searched or pinned
@@ -124,27 +217,37 @@ def main(argv=None):
                 f"(pp*interleave) == 0, cp needs seq % (2*cp) == 0)")
         plan = res.plan
         mesh = mesh_lib.make_mesh(shape, axes)
+        if plan.pp > 1:
+            hp = PipelineTrainer(model, plan, mesh)
+        else:
+            hp = construct_hybrid_parallel_model(model, plan, mesh)
     sched = f" pp={plan.pp}/{plan.pp_schedule}" + (
         f"x{plan.pp_interleave}" if plan.pp_interleave > 1 else "") \
         if plan.pp > 1 else ""
     print(f"plan: {plan.default_strategy.short()} ga={plan.grad_accum}{sched} "
           f"groups={len(plan.groups())}")
 
-    if plan.pp > 1:
-        hp = PipelineTrainer(model, plan, mesh)
-    else:
-        hp = construct_hybrid_parallel_model(model, plan, mesh)
-    params = hp.init_params(jax.random.PRNGKey(0))
+    host_rng = jax.random.PRNGKey(0)     # the run's host key; rides CarryState
+    params = hp.init_params(host_rng)
     opt = hp.init_opt_state(params)
     n_params = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(params))
     print(f"model: {cfg.name} {n_params/1e6:.1f}M params")
 
     start_step = 0
     if args.resume and args.ckpt_dir and ckpt_lib.latest_step(args.ckpt_dir) is not None:
-        restored = ckpt_lib.restore(args.ckpt_dir,
-                                    params_like=hp.ungroup(params), opt_like=opt)
-        params = hp.group(jax.tree.map(jnp.asarray, restored["params"]))
-        opt = jax.tree.map(jnp.asarray, restored["opt"])
+        try:
+            restored = ckpt_lib.restore(
+                args.ckpt_dir, params_like=hp.ungroup(params),
+                opt_like=resize_lib.canonical_state(hp, params, opt)[1])
+            opt = hp.place_opt_state(restored["opt"])
+        except KeyError:
+            # checkpoints from before live resize stored the optimizer state
+            # in the trainer's grouped layout rather than the canonical one
+            restored = ckpt_lib.restore(args.ckpt_dir,
+                                        params_like=hp.ungroup(params),
+                                        opt_like=opt)
+            opt = jax.tree.map(jnp.asarray, restored["opt"])
+        params = hp.place_params(restored["params"])
         start_step = restored["step"]
         print(f"resumed from step {start_step}")
 
@@ -153,16 +256,39 @@ def main(argv=None):
 
     t_start = time.perf_counter()
     tokens_done = 0
-    for step in range(start_step, args.steps):
-        if args.simulate_failure_at and step == args.simulate_failure_at:
-            print("!! simulated node failure: re-searching plan for 75% capacity")
-            event = ElasticEvent(old_devices=256, new_devices=192)
-            new_plan = replan(get_config(args.arch) if not args.preset else cfg,
-                              event, args.seq, args.batch)
-            print(f"   new plan: {new_plan.default_strategy.short()} "
-                  f"ga={new_plan.grad_accum} ({new_plan.notes.split('|')[-1].strip()})")
+    last_metrics = None
+    pending = [e for e in events if e[0] >= start_step]
+    if len(pending) != len(events):
+        print(f"warning: dropping {len(events) - len(pending)} resize event(s) "
+              f"before resumed step {start_step}")
+    cur_devices = plan.num_devices if mesh is not None else 1
+    step = start_step
+    while step < args.steps:
+        if pending and step == pending[0][0]:
+            _, new_dev = pending.pop(0)
+            if new_dev and mesh is not None:
+                print(f"!! simulated membership change at step {step}: "
+                      f"{cur_devices} -> {new_dev} devices ({args.elastic_mode})")
+                event = ElasticEvent(old_devices=cur_devices,
+                                     new_devices=new_dev, reason="simulated")
+                carry = resize_lib.CarryState(step=step,
+                                              samples_seen=step * args.batch,
+                                              rng=host_rng)
+                hp, plan, mesh, params, opt, carry, step_fn = _apply_resize(
+                    cfg, args, event, model, hp, plan, params, opt, carry)
+                step, host_rng = carry.step, carry.rng   # resume exactly where
+                cur_devices = new_dev                    # the old trainer stopped
+            else:
+                # legacy behavior: replan for 75% capacity and report only
+                print("!! simulated node failure: re-searching plan for 75% capacity")
+                event = ElasticEvent(old_devices=256, new_devices=192)
+                new_plan = replan(get_config(args.arch) if not args.preset else cfg,
+                                  event, args.seq, args.batch)
+                print(f"   new plan: {new_plan.default_strategy.short()} "
+                      f"ga={new_plan.grad_accum} ({new_plan.notes.split('|')[-1].strip()})")
         batch = {k: jnp.asarray(v) for k, v in ds.batch(step).items()}
         params, opt, metrics = step_fn(params, opt, batch)
+        last_metrics = metrics       # host sync deferred to log/digest time
         tokens_done += args.batch * args.seq
         if step % args.log_every == 0 or step == args.steps - 1:
             dt = time.perf_counter() - t_start
@@ -170,10 +296,21 @@ def main(argv=None):
                   f"gnorm {float(metrics['grad_norm']):.2f}  "
                   f"tok/s {tokens_done/dt:,.0f}")
         if args.ckpt_dir and (step + 1) % args.ckpt_every == 0:
-            path = ckpt_lib.save(args.ckpt_dir, step + 1, hp.ungroup(params), opt, plan)
+            canon_p, canon_o = resize_lib.canonical_state(hp, params, opt)
+            path = ckpt_lib.save(args.ckpt_dir, step + 1, canon_p, canon_o, plan)
             print(f"checkpoint -> {path}")
+        step += 1
     if args.ckpt_dir:
-        ckpt_lib.save(args.ckpt_dir, args.steps, hp.ungroup(params), opt, plan)
+        canon_p, canon_o = resize_lib.canonical_state(hp, params, opt)
+        ckpt_lib.save(args.ckpt_dir, args.steps, canon_p, canon_o, plan)
+    if args.digest:
+        canon_p, canon_o = resize_lib.canonical_state(hp, params, opt)
+        p_sum = sum(float(np.abs(np.asarray(jax.device_get(x), np.float64)).sum())
+                    for x in jax.tree.leaves(canon_p))
+        m_sum = sum(float(np.abs(np.asarray(jax.device_get(x), np.float64)).sum())
+                    for x in jax.tree.leaves(canon_o.m))
+        last_loss = float(last_metrics["loss"]) if last_metrics else float("nan")
+        print(f"digest params={p_sum:.6e} opt_m={m_sum:.6e} loss={last_loss:.8f}")
     print("done")
 
 

@@ -6,7 +6,6 @@ computed once at prefill.
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 from repro.configs.registry import ModelConfig

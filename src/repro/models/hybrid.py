@@ -19,7 +19,7 @@ import jax.numpy as jnp
 from repro.configs.registry import ModelConfig
 from repro.models import attention as attn
 from repro.models import embedding, ffn
-from repro.models.common import abstract_params, init_params, scan_or_unroll, stacked
+from repro.models.common import scan_or_unroll, stacked
 from repro.models.mamba2 import Mamba2LM, mamba_block_apply, mamba_block_defs
 from repro.models.norms import rmsnorm, rmsnorm_defs
 from repro.parallel.axes import lc

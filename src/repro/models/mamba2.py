@@ -70,7 +70,6 @@ def _conv_step(buf: jnp.ndarray, x_t: jnp.ndarray, w: jnp.ndarray):
 
     Tap order must mirror ``_causal_conv``: w[0] multiplies the NEWEST
     sample, w[W-1] the oldest — the window is oldest->newest, so flip w."""
-    W = w.shape[0]
     window = jnp.concatenate([buf, x_t[:, None, :]], axis=1)        # (B, W, C)
     y = jnp.einsum("bwc,wc->bc", window, w[::-1])
     return window[:, 1:, :], y

@@ -18,7 +18,6 @@ from repro.configs.registry import ModelConfig
 from repro.models import attention as attn
 from repro.models import embedding, ffn
 from repro.models.common import (
-    ParamDef,
     abstract_params,
     init_params,
     scan_or_unroll,

@@ -27,9 +27,8 @@ from typing import Optional
 import jax
 
 from repro.compat import Mesh, NamedSharding, P
-from repro.configs.registry import ModelConfig
-from repro.core.strategy import ExecutionPlan, GroupSpec, LayerStrategy
-from repro.models.common import ParamDef, logical_axes_tree
+from repro.core.strategy import ExecutionPlan, LayerStrategy
+from repro.models.common import ParamDef
 from repro.parallel.axes import MeshRules
 
 # logical axes that tensor parallelism shards over the model axis

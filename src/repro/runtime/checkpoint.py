@@ -6,6 +6,13 @@ mechanism behind elastic scaling (runtime/elastic.py): after a world-size
 change the SearchEngine emits a new plan and the same checkpoint reshards
 onto the new mesh via ``device_put`` with the new shardings.
 
+Since live resize landed (runtime/resize.py) the checkpoint round trip is no
+longer the *primary* elastic path: in-memory migration reshards live state
+directly.  This module remains the fallback for real membership loss (the
+old buffers are gone) and the equivalence oracle — both paths must produce
+bitwise identical state, which the elastic tests and
+``benchmarks/elastic_resize.py`` assert.
+
 Format: one compressed file per checkpoint step containing raw array bytes
 keyed by pytree path, plus a JSON sidecar with the plan and bookkeeping.
 The file starts with a 7-byte header::
@@ -227,9 +234,11 @@ def restore(
     params_like: Any = None,           # pytree template (abstract ok)
     opt_like: Any = None,
     shardings: Any = None,             # optional matching sharding pytree
+    opt_shardings: Any = None,         # same, for the optimizer state
 ) -> dict:
-    """Returns {"step", "params", "opt", "plan"}.  With ``shardings`` given,
-    leaves are device_put directly onto the (possibly new) mesh."""
+    """Returns {"step", "params", "opt", "plan"}.  With ``shardings`` /
+    ``opt_shardings`` given, leaves are device_put directly onto the
+    (possibly new) mesh."""
     directory = pathlib.Path(directory)
     step = step if step is not None else latest_step(directory)
     if step is None:
@@ -256,5 +265,8 @@ def restore(
             params = jax.device_put(params, shardings)
         result["params"] = params
     if opt_like is not None:
-        result["opt"] = rebuild("opt", opt_like)
+        opt = rebuild("opt", opt_like)
+        if opt_shardings is not None:
+            opt = jax.device_put(opt, opt_shardings)
+        result["opt"] = opt
     return result

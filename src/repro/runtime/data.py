@@ -78,7 +78,6 @@ class SyntheticDataset:
 
     def _tokens(self, sample_ids: np.ndarray) -> np.ndarray:
         st = _text_len(self.cfg, self.seq_len)
-        rng = np.random.Generator(np.random.Philox(key=self.seed, counter=0))
         # per-sample independent Philox streams keyed by sample id
         out = np.empty((len(sample_ids), st + 1), np.int32)
         for row, sid in enumerate(sample_ids):

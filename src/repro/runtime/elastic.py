@@ -29,19 +29,35 @@ class ElasticEvent:
 
 
 def surviving_mesh(devices: int, *, model_axis: int = 16,
-                   pp: int = 1, cp: int = 1) -> tuple[tuple, tuple]:
-    """Largest mesh using <= devices with the given model axis, pipeline
-    degree (pp > 1 adds a leading "pod" axis carrying the stages) and
-    context-parallel degree (cp > 1 adds a "cp" axis for ring attention).
+                   pp: int = 1, cp: int = 1,
+                   global_batch: Optional[int] = None) -> tuple[tuple, tuple]:
+    """Largest mesh using <= devices with (at most) the given model axis,
+    pipeline degree (pp > 1 adds a leading "pod" axis carrying the stages)
+    and context-parallel degree (cp > 1 adds a "cp" axis for ring attention).
 
-    TPU slices fail in whole hosts; we conservatively drop to the next
-    power-of-two data dimension so the mesh stays rectangular."""
-    model_axis = min(model_axis, max(devices // (pp * cp), 1))
-    data = devices // (pp * cp * model_axis)
-    p = 1
-    while p * 2 <= data:
-        p *= 2
-    shape: tuple = (p, model_axis)
+    Historically this dropped the data dimension to the next power of two
+    "to stay rectangular" — but any (data, model) pair is rectangular, so 24
+    surviving devices with model_axis=16 planned a (1, 16) mesh and idled a
+    third of the slice.  Now every exact data dimension is accepted; the only
+    shrink applied is making data divide ``global_batch`` (the search
+    requires microbatches to shard evenly over DP).  When the requested model
+    axis cannot tile the survivors, halving it is also considered — whichever
+    (data, model) pair uses the most devices wins (larger model axis breaks
+    ties, staying closest to the pre-failure TP domain)."""
+    avail = max(devices // (pp * cp), 1)
+    best: Optional[tuple[int, int, int]] = None   # (used, model, data)
+    m = min(model_axis, avail)
+    while m >= 1:
+        data = avail // m
+        if global_batch is not None:
+            while data > 1 and global_batch % data != 0:
+                data -= 1
+        cand = (data * m, m, data)
+        if best is None or cand > best:
+            best = cand
+        m //= 2
+    _, m, data = best
+    shape: tuple = (data, m)
     axes: tuple = ("data", "model")
     if cp > 1:
         shape, axes = (cp,) + shape, ("cp",) + axes
@@ -106,7 +122,8 @@ def replan(
     best_pp1: Optional[SearchResult] = None
     for pp in replan_pp_candidates(cfg, event.new_devices):
         for cp in replan_cp_candidates(cfg, seq_len, event.new_devices // pp):
-            mesh_shape, mesh_axes = surviving_mesh(event.new_devices, pp=pp, cp=cp)
+            mesh_shape, mesh_axes = surviving_mesh(event.new_devices, pp=pp, cp=cp,
+                                                   global_batch=global_batch)
             engine = SearchEngine(cfg, dataclasses.replace(
                 cluster, chips=int(math.prod(mesh_shape))))
             res = engine.search(seq_len, global_batch, mesh_shape=mesh_shape,
@@ -122,3 +139,22 @@ def replan(
     plan = res.plan
     plan.notes += f" | elastic replan: {event.old_devices}->{event.new_devices} ({event.reason})"
     return plan
+
+
+def replan_and_diff(
+    cfg: ModelConfig,
+    event: ElasticEvent,
+    seq_len: int,
+    global_batch: int,
+    old_plan: ExecutionPlan,
+    **kwargs,
+) -> tuple[ExecutionPlan, "resize.MigrationSpec"]:
+    """Replan for the surviving devices AND diff the result against the plan
+    currently running — the first half of a live resize (runtime/resize.py).
+    The returned :class:`~repro.runtime.resize.MigrationSpec` tells the
+    driver what the swap involves (axis resharding only, or a pipeline
+    restage / scan regroup) before any device state moves."""
+    from repro.runtime import resize
+
+    new_plan = replan(cfg, event, seq_len, global_batch, **kwargs)
+    return new_plan, resize.diff_plans(old_plan, new_plan)

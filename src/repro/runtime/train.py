@@ -15,18 +15,16 @@ O(#layers) — essential for the 40-cell dry-run compile budget.
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Callable, Optional
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro import compat
 from repro.compat import Mesh, NamedSharding, P
-from repro.configs.registry import ModelConfig
-from repro.core.strategy import ExecutionPlan, LayerStrategy
+from repro.core.strategy import ExecutionPlan
 from repro.parallel import sharding as shd
-from repro.parallel.axes import MeshRules, axis_rules
+from repro.parallel.axes import axis_rules
 from repro.parallel.remat import apply_remat
 from repro.runtime import optimizer as opt_lib
 
@@ -132,6 +130,27 @@ class HybridParallelModel:
 
     def abstract_opt_state(self):
         return opt_lib.abstract_adamw_state(self.abstract_params(), self.opt_cfg)
+
+    # rebuild-from-state entry points (live elastic resize / restore): take
+    # the *canonical* (ungrouped) trees and lay them out for THIS trainer's
+    # plan and mesh — the counterpart of init_params for migrated state.
+    def place_params(self, canonical_params):
+        grouped = self.group(jax.tree.map(jnp.asarray, canonical_params))
+        if self.mesh is None:
+            return grouped
+        return jax.device_put(grouped, self.shardings(self.param_specs))
+
+    def place_opt_state(self, canonical_opt: opt_lib.AdamWState) -> opt_lib.AdamWState:
+        place = lambda tree, specs: (
+            jax.tree.map(jnp.asarray, self.group(tree)) if self.mesh is None
+            else jax.device_put(self.group(jax.tree.map(jnp.asarray, tree)),
+                                self.shardings(specs)))
+        step = jnp.asarray(canonical_opt.step)
+        if self.mesh is not None:
+            step = jax.device_put(step, NamedSharding(self.mesh, P()))
+        return opt_lib.AdamWState(step=step,
+                                  m=place(canonical_opt.m, self.opt_specs),
+                                  v=place(canonical_opt.v, self.opt_specs))
 
     def opt_state_specs(self):
         return opt_lib.AdamWState(step=P(), m=self.opt_specs, v=self.opt_specs)

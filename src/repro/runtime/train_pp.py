@@ -27,7 +27,7 @@ Schedules:
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Optional
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -123,6 +123,22 @@ class PipelineTrainer:
 
     def abstract_opt_state(self):
         return opt_lib.abstract_adamw_state(self.abstract_params(), self.opt_cfg)
+
+    # rebuild-from-state entry points, mirroring HybridParallelModel so the
+    # resize/restore paths can treat both trainers uniformly: canonical
+    # (unstaged) trees in, this trainer's staged+sharded layout out.
+    def place_params(self, canonical_params):
+        staged = self.group(jax.tree.map(jnp.asarray, canonical_params))
+        return jax.device_put(staged, self.shardings(self.param_specs))
+
+    def place_opt_state(self, canonical_opt: opt_lib.AdamWState) -> opt_lib.AdamWState:
+        place = lambda tree, specs: jax.device_put(
+            self.group(jax.tree.map(jnp.asarray, tree)), self.shardings(specs))
+        step = jax.device_put(jnp.asarray(canonical_opt.step),
+                              NamedSharding(self.mesh, P()))
+        return opt_lib.AdamWState(step=step,
+                                  m=place(canonical_opt.m, self.opt_specs),
+                                  v=place(canonical_opt.v, self.opt_specs))
 
     def shardings(self, specs):
         return jax.tree.map(lambda s: NamedSharding(self.mesh, s), specs,

@@ -80,8 +80,32 @@ def test_elastic_replan_and_resume(tmp_path, rng):
 
 def test_surviving_mesh_shapes():
     assert surviving_mesh(256) == ((16, 16), ("data", "model"))
-    assert surviving_mesh(192) == ((8, 16), ("data", "model"))
+    # 192 survivors form an exact (12, 16) rectangle — the old power-of-two
+    # shrink planned (8, 16) and idled 64 chips (see test_elastic_resize.py)
+    assert surviving_mesh(192) == ((12, 16), ("data", "model"))
+    assert surviving_mesh(192, global_batch=256) == ((8, 16), ("data", "model"))
     assert surviving_mesh(8, model_axis=16) == ((1, 8), ("data", "model"))
+
+
+def test_restore_device_puts_params_and_opt_onto_shardings(tmp_path, rng):
+    """restore(shardings=..., opt_shardings=...) places leaves directly onto
+    the target mesh — the manual-reshard API the elastic flow documents
+    (the trainers' place_* hooks are the usual path, so pin this one here)."""
+    from repro.compat import NamedSharding, P, make_mesh
+
+    cfg, model, plan, hp = _setup(rng)
+    params = hp.ungroup(hp.init_params(rng))
+    opt = hp.init_opt_state(params)
+    ckpt.save(tmp_path, 2, params, opt, plan)
+    mesh = make_mesh((1,), ("data",))
+    repl = lambda tree: jax.tree.map(lambda _: NamedSharding(mesh, P()), tree)
+    out = ckpt.restore(tmp_path, params_like=params, opt_like=opt,
+                       shardings=repl(params), opt_shardings=repl(opt))
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(out["params"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for tree in (out["params"], out["opt"]):
+        for leaf in jax.tree.leaves(tree):
+            assert isinstance(leaf.sharding, NamedSharding)
 
 
 # ------------------------------------------------------------ codec registry

@@ -4,7 +4,6 @@ mesh so both code paths run regardless of the installed JAX."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro import compat
 from repro.compat import P

@@ -1,5 +1,4 @@
 """Gradient compression: quantization error bounds + error-feedback property."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 from tests._prop import given, settings, st
@@ -16,7 +15,6 @@ def test_quantize_error_bound(seed, n):
     c = quantize(x)
     back = dequantize(c, x.shape)
     # per-block absmax scaling: |err| <= scale/2 per element
-    blocks = np.abs(np.asarray(x)).reshape(-1) if n % 256 == 0 else None
     err = np.abs(np.asarray(back) - np.asarray(x))
     scale_bound = np.max(np.abs(np.asarray(x))) / 127.0
     assert err.max() <= scale_bound * 1.01 + 1e-7

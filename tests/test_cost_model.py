@@ -1,5 +1,4 @@
 """Cost/memory model invariants + profiler exactness against real models."""
-import numpy as np
 import pytest
 from tests._prop import given, settings, st
 

@@ -1,5 +1,4 @@
 """HLO collective parser: loop trip-count multiplication (the scan-once fix)."""
-import pytest
 
 from repro.launch.hlo_stats import collective_stats, _shape_bytes
 from tests._mp import run_with_devices

@@ -2,7 +2,6 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from tests._prop import given, settings, st
 
 from repro.configs.registry import get_config

@@ -4,7 +4,6 @@ import jax
 import numpy as np
 import pytest
 from tests._prop import given, settings, st
-from jax.sharding import PartitionSpec as P
 
 from repro.compat import abstract_mesh
 
@@ -121,7 +120,6 @@ def test_spec_for_shape_divisibility_property(dim):
 
 
 def test_group_blocks_roundtrip():
-    import jax.numpy as jnp
 
     cfg = get_config("llama3.2-1b").reduced()
     model = build_model(cfg)
