@@ -55,6 +55,10 @@ def worker(seq: int = 16, batch: int = 16, steps_between: int = 1) -> list[dict]
     from repro.runtime.data import SyntheticDataset
     from repro.runtime.elastic import ElasticEvent, replan, replan_and_diff
 
+    if steps_between < 1:
+        raise ValueError("steps_between must be >= 1: each event needs real "
+                         "optimizer state before it and a post-migration step "
+                         "to measure loss_after")
     assert jax.device_count() >= N_DEVICES, jax.device_count()
     cfg = get_config("llama3.2-1b").reduced()
     model = build_model(cfg)

@@ -216,6 +216,23 @@ def shard_map(
 
 
 # ---------------------------------------------------------------------------
+# compiled-artifact analyses
+# ---------------------------------------------------------------------------
+
+def cost_analysis(computation) -> dict:
+    """Normalized ``.cost_analysis()`` for a Lowered/Compiled computation.
+
+    0.4.x releases return a single-element list of per-program metric dicts;
+    newer releases return the dict directly.  Either way the caller gets a
+    flat ``{metric: value}`` dict (empty when XLA reports nothing).
+    """
+    ca = computation.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        return dict(ca[0]) if ca else {}
+    return dict(ca) if ca else {}
+
+
+# ---------------------------------------------------------------------------
 # jit flag filtering
 # ---------------------------------------------------------------------------
 

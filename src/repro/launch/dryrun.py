@@ -31,6 +31,7 @@ import traceback
 
 import numpy as np
 
+from repro import compat
 from repro.configs.registry import ARCH_IDS, get_config
 from repro.configs.shapes import SHAPES, supports_shape
 from repro.core.search import SearchEngine, serving_plan
@@ -122,7 +123,11 @@ def run_cell(arch: str, shape_id: str, *, multi_pod: bool = False,
              force_ga: int | None = None,
              pp: int = 1, pp_schedule: str | None = None,
              pp_interleave: int = 2, cp: int = 1,
-             seq_len: int | None = None) -> dict:
+             seq_len: int | None = None,
+             out: dict | None = None) -> dict:
+    # ``out`` (when given) is mutated in place as stages complete, so a crash
+    # mid-cell leaves the caller holding the stages that did succeed
+    # (memory_analysis, lower/compile timings, ...) alongside the error.
     cfg = get_config(arch)
     spec = SHAPES[shape_id]
     if seq_len is not None:                          # long-context override
@@ -146,10 +151,11 @@ def run_cell(arch: str, shape_id: str, *, multi_pod: bool = False,
         mesh_tag = _mesh_tag(multi_pod)
     mesh_axes = tuple(mesh.axis_names)
     mesh_shape = tuple(mesh.shape[a] for a in mesh_axes)
-    out: dict = {"arch": arch, "shape": shape_id, "mesh": mesh_tag,
-                 "mesh_shape": mesh_shape, "devices": int(np.prod(mesh_shape)),
-                 "kind": spec.kind, "seq_len": spec.seq_len,
-                 "global_batch": spec.global_batch}
+    out = out if out is not None else {}
+    out.update({"arch": arch, "shape": shape_id, "mesh": mesh_tag,
+                "mesh_shape": mesh_shape, "devices": int(np.prod(mesh_shape)),
+                "kind": spec.kind, "seq_len": spec.seq_len,
+                "global_batch": spec.global_batch})
 
     ok, why = supports_shape(cfg, spec)
     if not ok:
@@ -246,7 +252,7 @@ def run_cell(arch: str, shape_id: str, *, multi_pod: bool = False,
     ma = compiled.memory_analysis()
     print(ma)                                # the required proof-of-fit output
     out["memory_analysis"] = _memory_dict(ma)
-    ca = compiled.cost_analysis()
+    ca = compat.cost_analysis(compiled)
     print({k: ca.get(k) for k in ("flops", "bytes accessed")})
     out["xla_cost_analysis"] = {
         "flops_per_device_scanned": float(ca.get("flops", 0.0)),
@@ -284,7 +290,7 @@ def run_cell(arch: str, shape_id: str, *, multi_pod: bool = False,
                     lowered_u = engine_u.jit_decode_step(donate=True).lower(
                         params_abs, specs["tokens"], specs["cache"],
                         specs["cache_index"], specs["kv_len"])
-            cu = lowered_u.cost_analysis()
+            cu = compat.cost_analysis(lowered_u)
             out["unrolled"] = {
                 "flops_global": float(cu.get("flops", 0.0)),
                 "bytes_global_unoptimized": float(cu.get("bytes accessed", 0.0)),
@@ -358,20 +364,22 @@ def main():
             tag = f"{arch}__{shape_id}__{mtag}" + (f"__{args.tag}" if args.tag else "")
             path = outdir / f"{tag}.json"
             print(f"=== {tag} ===", flush=True)
+            # run_cell fills res in place, so on failure the stages that did
+            # succeed before the crash survive next to the error record
+            res: dict = {"arch": arch, "shape": shape_id, "mesh": mtag}
             try:
-                res = run_cell(arch, shape_id, multi_pod=mp,
-                               skip_unrolled=args.skip_unrolled,
-                               custom_mesh=custom,
-                               force_strategy=args.force_strategy,
-                               force_ga=args.force_ga,
-                               pp=args.pp, pp_schedule=args.pp_schedule,
-                               pp_interleave=args.pp_interleave,
-                               cp=args.cp, seq_len=args.seq_len)
+                run_cell(arch, shape_id, multi_pod=mp,
+                         skip_unrolled=args.skip_unrolled,
+                         custom_mesh=custom,
+                         force_strategy=args.force_strategy,
+                         force_ga=args.force_ga,
+                         pp=args.pp, pp_schedule=args.pp_schedule,
+                         pp_interleave=args.pp_interleave,
+                         cp=args.cp, seq_len=args.seq_len, out=res)
             except Exception as e:  # noqa: BLE001
                 failures += 1
-                res = {"arch": arch, "shape": shape_id, "mesh": mtag,
-                       "error": f"{type(e).__name__}: {e}",
-                       "traceback": traceback.format_exc()}
+                res["error"] = f"{type(e).__name__}: {e}"
+                res["traceback"] = traceback.format_exc()
                 print(f"[FAIL] {tag}: {e}")
             path.write_text(json.dumps(res, indent=2, default=str))
     print(f"done; {failures} failures")

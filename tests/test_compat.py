@@ -177,3 +177,31 @@ def test_version_probes_are_consistent():
         assert hasattr(jax, "shard_map")
     else:
         from jax.experimental.shard_map import shard_map  # noqa: F401
+
+
+# ------------------------------------------------------------ cost_analysis
+
+class _FakeComputation:
+    def __init__(self, ret):
+        self._ret = ret
+
+    def cost_analysis(self):
+        return self._ret
+
+
+def test_cost_analysis_normalizes_list_dict_and_empty():
+    metrics = {"flops": 1.0, "bytes accessed": 2.0}
+    # 0.4.x: single-element list of per-program dicts
+    assert compat.cost_analysis(_FakeComputation([metrics])) == metrics
+    # newer releases: the dict directly
+    assert compat.cost_analysis(_FakeComputation(dict(metrics))) == metrics
+    # nothing reported
+    assert compat.cost_analysis(_FakeComputation([])) == {}
+    assert compat.cost_analysis(_FakeComputation(None)) == {}
+
+
+def test_cost_analysis_on_real_compiled():
+    compiled = jax.jit(lambda x: x * 2 + 1).lower(jnp.ones((8,))).compile()
+    ca = compat.cost_analysis(compiled)
+    assert isinstance(ca, dict)
+    assert ca.get("flops", 0.0) >= 0.0
