@@ -1,0 +1,196 @@
+"""Async-checkpoint benchmark: step-loop blocking time, bitwise equivalence
+to the sync oracle, and content-addressed dedup across steps.
+
+Three measurements over a reduced-llama canonical state (params + Adam m/v):
+
+* **sync** — the pre-PR-5 behavior: every periodic save stalls the step loop
+  for the full device_get + hash + compress + write.
+* **async** — ``CheckpointWriter.save_async`` snapshots non-blockingly and
+  writes on the background thread while the (simulated) step compute runs;
+  the loop only ever blocks on the previous save.  The exact same sequence
+  of states is saved to a second directory, so the two trees can be compared
+  **byte for byte** — the sync path is the equivalence oracle (same pattern
+  as live-resize-vs-checkpoint in ``benchmarks/elastic_resize.py``).
+* **dedup** — an elastic-churn-like save sequence where the embedding /
+  final-norm leaves stay frozen across steps: shard blobs are named by
+  content hash and shared via the step indexes, so the repeated leaves cost
+  zero new bytes and the raw-bytes dedup ratio exceeds 1.
+
+``--check`` (the CI smoke, driven by ``benchmarks/run.py --check``) asserts
+(a) the async tree is bitwise identical to the sync tree, (b) the async
+step-loop blocking time is strictly below the sync baseline, and (c) the
+dedup ratio exceeds 1.
+
+Usage:
+  PYTHONPATH=src python benchmarks/checkpoint_async.py           # table
+  PYTHONPATH=src python benchmarks/checkpoint_async.py --check   # CI smoke
+"""
+from __future__ import annotations
+
+import argparse
+import hashlib
+import pathlib
+import tempfile
+import time
+
+#: simulated per-step compute window the async writer can overlap with
+COMPUTE_S = 0.2
+N_SAVES = 3
+
+
+def _dir_digest(root: pathlib.Path) -> dict[str, str]:
+    return {str(f.relative_to(root)): hashlib.sha256(f.read_bytes()).hexdigest()
+            for f in sorted(root.rglob("*")) if f.is_file()}
+
+
+def _states(n: int):
+    """n canonical (params, opt) states from real train-like updates that
+    leave the embedding + final-norm subtrees untouched (the frozen-leaf
+    dedup scenario)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs.registry import get_config
+    from repro.core.strategy import ExecutionPlan, LayerStrategy
+    from repro.models import build_model
+    from repro.runtime.train import construct_hybrid_parallel_model
+
+    cfg = get_config("llama3.2-1b").reduced()
+    model = build_model(cfg)
+    strat = LayerStrategy()
+    plan = ExecutionPlan(arch=cfg.name, shape="t", mesh_axes=("data",),
+                         mesh_shape=(1,),
+                         layer_strategies=[strat] * cfg.num_layers,
+                         default_strategy=strat)
+    hp = construct_hybrid_parallel_model(model, plan)
+    params = hp.init_params(jax.random.PRNGKey(0))
+    opt = hp.init_opt_state(params)
+
+    @jax.jit
+    def perturb(tree):
+        return jax.tree.map(lambda x: x * 1.001 + 0.001, tree)
+
+    states = []
+    for _ in range(n):
+        canon_p, canon_o = hp.checkpoint_state(params, opt)
+        states.append((canon_p, canon_o))
+        new_blocks = perturb((params["blocks"], opt.m["blocks"], opt.v["blocks"]))
+        params = {**params, "blocks": new_blocks[0]}
+        opt = type(opt)(step=opt.step + 1,
+                        m={**opt.m, "blocks": new_blocks[1]},
+                        v={**opt.v, "blocks": new_blocks[2]})
+        jax.block_until_ready(new_blocks)
+    return plan, states
+
+
+def run() -> list[dict]:
+    from repro.runtime import checkpoint as ckpt
+
+    plan, states = _states(N_SAVES)
+    rows: list[dict] = []
+
+    with tempfile.TemporaryDirectory(prefix="ckpt-bench-") as td:
+        root = pathlib.Path(td)
+        sync_dir, async_dir, churn_dir = (root / n for n in
+                                          ("sync", "async", "churn"))
+
+        # one throwaway save so one-time costs (codec import, dir setup)
+        # don't land on the measured sync loop
+        ckpt.save(root / "warmup", 0, states[0][0], states[0][1], plan)
+
+        # ---- sync baseline: every save stalls the loop -------------------
+        blocked_sync = 0.0
+        t_wall = time.perf_counter()
+        for step, (p, o) in enumerate(states):
+            time.sleep(COMPUTE_S)                    # simulated step compute
+            t0 = time.perf_counter()
+            ckpt.save(sync_dir, step, p, o, plan, keep=N_SAVES + 1)
+            blocked_sync += time.perf_counter() - t0
+        wall_sync = time.perf_counter() - t_wall
+        rows.append({"mode": "sync", "blocked_s": blocked_sync,
+                     "wall_s": wall_sync, "saves": N_SAVES})
+
+        # ---- async: the loop only blocks on the previous save ------------
+        writer = ckpt.CheckpointWriter()
+        t_wall = time.perf_counter()
+        with writer:
+            for step, (p, o) in enumerate(states):
+                time.sleep(COMPUTE_S)
+                writer.save_async(async_dir, step, p, o, plan,
+                                  keep=N_SAVES + 1)
+        wall_async = time.perf_counter() - t_wall
+        bitwise = _dir_digest(sync_dir) == _dir_digest(async_dir)
+        rows.append({"mode": "async", "blocked_s": writer.blocked_seconds,
+                     "wall_s": wall_async, "saves": writer.saves_completed,
+                     "bitwise_equal_to_sync": bitwise,
+                     "speedup_blocked": blocked_sync
+                     / max(writer.blocked_seconds, 1e-9)})
+
+        # ---- dedup: frozen leaves across steps cost zero new bytes -------
+        import json
+        for step, (p, o) in enumerate(states):
+            ckpt.save(churn_dir, step, p, o, plan, keep=N_SAVES + 1)
+        logical = unique = 0
+        seen: set[str] = set()
+        for idx in sorted(churn_dir.glob("step*.json")):
+            meta = json.loads(idx.read_text())
+            for rec in meta["shards"].values():
+                logical += rec["nbytes"]
+                if rec["blob"] not in seen:
+                    seen.add(rec["blob"])
+                    unique += rec["nbytes"]
+        rows.append({"mode": "dedup", "saves": N_SAVES,
+                     "logical_mb": logical / 1e6, "unique_mb": unique / 1e6,
+                     "dedup_ratio": logical / max(unique, 1),
+                     "blobs": len(seen)})
+    return rows
+
+
+def check(verbose: bool = True) -> list[dict]:
+    """CI smoke: async must be byte-identical to sync, stall the step loop
+    strictly less, and repeated saves must dedup (ratio > 1)."""
+    rows = run()
+    by_mode = {r["mode"]: r for r in rows}
+    sync, async_, dedup = by_mode["sync"], by_mode["async"], by_mode["dedup"]
+    assert async_["bitwise_equal_to_sync"], (
+        "async checkpoint tree diverged from the sync oracle")
+    assert async_["saves"] == sync["saves"] == N_SAVES
+    assert async_["blocked_s"] < sync["blocked_s"], (
+        f"async save blocked the step loop {async_['blocked_s']*1e3:.1f} ms, "
+        f"not below the sync baseline {sync['blocked_s']*1e3:.1f} ms")
+    assert dedup["dedup_ratio"] > 1.0, (
+        f"repeated saves did not dedup: ratio {dedup['dedup_ratio']:.2f}")
+    if verbose:
+        print(f"OK: sync blocked {sync['blocked_s']*1e3:.1f} ms vs async "
+              f"{async_['blocked_s']*1e3:.1f} ms "
+              f"({async_['speedup_blocked']:.1f}x less stall, bitwise equal)")
+        print(f"OK: dedup {dedup['logical_mb']:.1f} MB logical -> "
+              f"{dedup['unique_mb']:.1f} MB unique blobs "
+              f"({dedup['dedup_ratio']:.2f}x, {dedup['blobs']} blobs)")
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--check", action="store_true",
+                    help="CI smoke: assert bitwise-equal async saves, lower "
+                         "step-loop blocking time, and a dedup ratio > 1")
+    args = ap.parse_args()
+    if args.check:
+        check()
+        return
+    print("mode,blocked_ms,wall_ms,saves,derived")
+    for r in run():
+        if r["mode"] == "dedup":
+            print(f"dedup,,,{r['saves']},ratio={r['dedup_ratio']:.2f}x_"
+                  f"logical={r['logical_mb']:.1f}MB_unique={r['unique_mb']:.1f}MB")
+        else:
+            extra = (f"bitwise={r['bitwise_equal_to_sync']}"
+                     f"_stall_cut={r['speedup_blocked']:.1f}x"
+                     if r["mode"] == "async" else "")
+            print(f"{r['mode']},{r['blocked_s']*1e3:.1f},{r['wall_s']*1e3:.1f},"
+                  f"{r['saves']},{extra}")
+
+
+if __name__ == "__main__":
+    main()

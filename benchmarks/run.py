@@ -8,6 +8,7 @@ Prints ``name,us_per_call,derived`` CSV rows per the harness contract.
   pipeline   — schedule comparison (gpipe/1f1b/interleaved bubble + in-flight)
   cp         — context-parallel ring-attention memory/step-time sweep
   elastic    — live resize: in-memory migration vs checkpoint round trip
+  ckpt       — async checkpoint writes: step-loop stall + dedup ratio
   roofline   — 3-term roofline table from dry-run artifacts (if present)
 
 ``--check`` is the single CI smoke entrypoint: it *discovers* every suite
@@ -161,6 +162,22 @@ def main() -> None:
                 f"_bitwise={r['bitwise_equal']}"))
     except Exception as e:  # noqa: BLE001
         rows.append(("elastic.skipped", 0.0, type(e).__name__))
+
+    # ---- async checkpointing (stall + dedup vs the sync oracle) --------------
+    try:
+        from benchmarks import checkpoint_async
+
+        for r in checkpoint_async.run():
+            if r["mode"] == "dedup":
+                rows.append(("ckpt.dedup", 0.0,
+                             f"ratio={r['dedup_ratio']:.2f}x_blobs={r['blobs']}"))
+            else:
+                rows.append((f"ckpt.{r['mode']}", r["blocked_s"] * 1e6,
+                             f"wall_ms={r['wall_s']*1e3:.1f}"
+                             + (f"_bitwise={r['bitwise_equal_to_sync']}"
+                                if r["mode"] == "async" else "")))
+    except Exception as e:  # noqa: BLE001
+        rows.append(("ckpt.skipped", 0.0, type(e).__name__))
 
     # ---- DP ablation (paper's core algorithm vs cheaper selectors) -----------
     try:

@@ -34,6 +34,13 @@ BLOCK = 256
 # best available codec and records its format byte in the checkpoint header,
 # so files round-trip across environments with different codec sets.
 
+#: the zstd frame magic (RFC 8878 §3.1.1) — legacy pre-header checkpoints
+#: are bare zstd streams, so this is the only non-GVCK prefix the checkpoint
+#: reader accepts; anything else is rejected as corrupt instead of being
+#: routed into the legacy decoder's missing-dependency error.
+LEGACY_ZSTD_MAGIC = b"\x28\xb5\x2f\xfd"
+
+
 @dataclasses.dataclass(frozen=True)
 class CheckpointCodec:
     name: str

@@ -19,6 +19,18 @@ from repro.configs.registry import ModelConfig
 from repro.configs.shapes import ShapeSpec
 
 
+#: dtype of the precomputed embedding inputs (vis_embeds / audio frames).
+#: Must match between ``input_specs`` (what the dry-run lowers against) and
+#: ``SyntheticDataset.batch`` (what the real step is fed) — a mismatch means
+#: the lowered executable never sees the shapes/dtypes that actually arrive.
+EMBED_DTYPE = jnp.bfloat16
+
+#: Philox stream-id word for audio frames: keyed per (seed, sample id) just
+#: like the token stream, but on a distinct stream so frames and tokens of
+#: the same sample draw independent bits.
+_FRAMES_STREAM = 7
+
+
 def _text_len(cfg: ModelConfig, seq_len: int) -> int:
     if cfg.family == "vlm":
         return seq_len - cfg.vis_tokens
@@ -35,17 +47,17 @@ def input_specs(cfg: ModelConfig, shape: ShapeSpec, model=None) -> dict:
             "labels": jax.ShapeDtypeStruct((B, st), jnp.int32),
         }
         if cfg.family == "vlm":
-            out["vis_embeds"] = jax.ShapeDtypeStruct((B, cfg.vis_tokens, cfg.d_model), jnp.bfloat16)
+            out["vis_embeds"] = jax.ShapeDtypeStruct((B, cfg.vis_tokens, cfg.d_model), EMBED_DTYPE)
         if cfg.family == "audio":
-            out["frames"] = jax.ShapeDtypeStruct((B, cfg.enc_frames, cfg.d_model), jnp.bfloat16)
+            out["frames"] = jax.ShapeDtypeStruct((B, cfg.enc_frames, cfg.d_model), EMBED_DTYPE)
         return out
     if shape.kind == "prefill":
         st = _text_len(cfg, S)
         out = {"tokens": jax.ShapeDtypeStruct((B, st), jnp.int32)}
         if cfg.family == "vlm":
-            out["vis_embeds"] = jax.ShapeDtypeStruct((B, cfg.vis_tokens, cfg.d_model), jnp.bfloat16)
+            out["vis_embeds"] = jax.ShapeDtypeStruct((B, cfg.vis_tokens, cfg.d_model), EMBED_DTYPE)
         if cfg.family == "audio":
-            out["frames"] = jax.ShapeDtypeStruct((B, cfg.enc_frames, cfg.d_model), jnp.bfloat16)
+            out["frames"] = jax.ShapeDtypeStruct((B, cfg.enc_frames, cfg.d_model), EMBED_DTYPE)
         return out
     if shape.kind == "decode":
         assert model is not None, "decode specs need the model for its cache pytree"
@@ -97,11 +109,20 @@ class SyntheticDataset:
             "tokens": toks[:, :-1],
             "labels": toks[:, 1:].copy(),
         }
+        embed_dtype = np.dtype(EMBED_DTYPE)   # match input_specs exactly
         if self.cfg.family == "vlm":
             batch["vis_embeds"] = np.zeros(
-                (len(ids), self.cfg.vis_tokens, self.cfg.d_model), np.float32)
+                (len(ids), self.cfg.vis_tokens, self.cfg.d_model), embed_dtype)
         if self.cfg.family == "audio":
-            g = np.random.Generator(np.random.Philox(key=self.seed + 7))
-            batch["frames"] = g.standard_normal(
-                (len(ids), self.cfg.enc_frames, self.cfg.d_model)).astype(np.float32)
+            # per-sample Philox streams, like _tokens: frame content follows
+            # the sample id, so any host layout yields the same global batch
+            # and no two steps repeat frames
+            frames = np.empty(
+                (len(ids), self.cfg.enc_frames, self.cfg.d_model), embed_dtype)
+            for row, sid in enumerate(ids):
+                g = np.random.Generator(np.random.Philox(
+                    key=[self.seed * 1_000_003 + int(sid), _FRAMES_STREAM]))
+                frames[row] = g.standard_normal(
+                    (self.cfg.enc_frames, self.cfg.d_model)).astype(embed_dtype)
+            batch["frames"] = frames
         return batch

@@ -38,7 +38,6 @@ import jax.numpy as jnp
 
 from repro.core.strategy import ExecutionPlan
 from repro.runtime import checkpoint as ckpt_lib
-from repro.runtime import optimizer as opt_lib
 from repro.runtime.train import construct_hybrid_parallel_model
 from repro.runtime.train_pp import PipelineTrainer
 
@@ -175,14 +174,11 @@ def make_trainer(model, plan: ExecutionPlan, mesh, opt_cfg=None):
 
 def canonical_state(trainer, params, opt_state):
     """Fold a trainer's layout back into the canonical (ungrouped, unstaged)
-    pytrees — the same form checkpoints store."""
-    canon_p = trainer.ungroup(params)
-    canon_o = None
-    if opt_state is not None:
-        canon_o = opt_lib.AdamWState(step=opt_state.step,
-                                     m=trainer.ungroup(opt_state.m),
-                                     v=trainer.ungroup(opt_state.v))
-    return canon_p, canon_o
+    pytrees — the same form checkpoints store.  (No host snapshot: migration
+    reshards on device; the trainers' ``checkpoint_state`` hooks are the
+    snapshot-starting variant for the async writer.)"""
+    return ckpt_lib.canonical_checkpoint_state(trainer, params, opt_state,
+                                               snapshot=False)
 
 
 def _tree_bytes(*trees) -> int:
@@ -227,12 +223,15 @@ def migrate(old_trainer, new_trainer, params, opt_state=None,
 def migrate_via_checkpoint(old_trainer, new_trainer, params, opt_state=None,
                            carry: Optional[CarryState] = None, *,
                            directory: Optional[str] = None,
-                           step: int = 0):
+                           step: int = 0,
+                           async_write: bool = True):
     """Checkpoint round-trip migration: the fallback when the old mesh's
     buffers are actually gone (real node failure), and the equivalence
     oracle the in-memory path is asserted against — both produce bitwise
     identical state, this one at the price of a serialize/compress/disk
-    round trip."""
+    round trip.  Writes through the async :class:`~repro.runtime.checkpoint.
+    CheckpointWriter` by default (``async_write=False`` is the synchronous
+    escape hatch — byte-identical output either way)."""
     t0 = time.perf_counter()
     spec = diff_plans(old_trainer.plan, new_trainer.plan)
     canon_p, canon_o = canonical_state(old_trainer, params, opt_state)
@@ -241,8 +240,14 @@ def migrate_via_checkpoint(old_trainer, new_trainer, params, opt_state=None,
         tmp = tempfile.TemporaryDirectory(prefix="resize-ckpt-")
         directory = tmp.name
     try:
-        ckpt_lib.save(pathlib.Path(directory), step, canon_p, canon_o,
-                      old_trainer.plan)
+        if async_write:
+            with ckpt_lib.CheckpointWriter() as writer:
+                writer.save_async(pathlib.Path(directory), step, canon_p,
+                                  canon_o, old_trainer.plan)
+                writer.wait()
+        else:
+            ckpt_lib.save(pathlib.Path(directory), step, canon_p, canon_o,
+                          old_trainer.plan)
         restored = ckpt_lib.restore(pathlib.Path(directory), step,
                                     params_like=canon_p, opt_like=canon_o)
         new_p = new_trainer.place_params(restored["params"])

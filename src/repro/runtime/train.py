@@ -26,6 +26,7 @@ from repro.core.strategy import ExecutionPlan
 from repro.parallel import sharding as shd
 from repro.parallel.axes import axis_rules
 from repro.parallel.remat import apply_remat
+from repro.runtime import checkpoint as ckpt_lib
 from repro.runtime import optimizer as opt_lib
 
 AUX_LOSS_WEIGHT = 0.01
@@ -151,6 +152,12 @@ class HybridParallelModel:
         return opt_lib.AdamWState(step=step,
                                   m=place(canonical_opt.m, self.opt_specs),
                                   v=place(canonical_opt.v, self.opt_specs))
+
+    def checkpoint_state(self, params, opt_state=None):
+        """Canonical-state handoff to the checkpoint writer: the ungrouped
+        trees with device→host copies already started, so an async save
+        overlaps its transfers with the next step's compute."""
+        return ckpt_lib.canonical_checkpoint_state(self, params, opt_state)
 
     def opt_state_specs(self):
         return opt_lib.AdamWState(step=P(), m=self.opt_specs, v=self.opt_specs)

@@ -41,6 +41,7 @@ from repro.parallel import sharding as shd
 from repro.parallel.axes import axis_rules
 from repro.parallel.pipeline import pipeline_forward, stage_stack, unstage_stack
 from repro.parallel.remat import apply_remat
+from repro.runtime import checkpoint as ckpt_lib
 from repro.runtime import optimizer as opt_lib
 from repro.runtime.train import softmax_xent
 from repro.models import embedding as emb_lib
@@ -139,6 +140,12 @@ class PipelineTrainer:
         return opt_lib.AdamWState(step=step,
                                   m=place(canonical_opt.m, self.opt_specs),
                                   v=place(canonical_opt.v, self.opt_specs))
+
+    def checkpoint_state(self, params, opt_state=None):
+        """Canonical-state handoff to the checkpoint writer, mirroring
+        HybridParallelModel: unstaged trees with device→host copies already
+        started for the async writer."""
+        return ckpt_lib.canonical_checkpoint_state(self, params, opt_state)
 
     def shardings(self, specs):
         return jax.tree.map(lambda s: NamedSharding(self.mesh, s), specs,

@@ -32,3 +32,82 @@ def test_different_steps_differ():
     cfg = get_config("llama3.2-1b").reduced()
     ds = SyntheticDataset(cfg, seq_len=16, global_batch=4)
     assert not np.array_equal(ds.batch(0)["tokens"], ds.batch(1)["tokens"])
+
+
+def _family_archs():
+    """One representative arch id per model family."""
+    from repro.configs.registry import ARCH_IDS, get_config
+
+    seen = {}
+    for arch in ARCH_IDS:
+        fam = get_config(arch).family
+        seen.setdefault(fam, arch)
+    return sorted(seen.items())
+
+
+def test_input_specs_match_batch_across_families():
+    """The dry-run lowers against ``input_specs``; the real step is fed
+    ``SyntheticDataset.batch``.  They must agree on keys, shapes AND dtypes
+    for every model family — a bf16 spec over an f32 batch means the lowered
+    executable never sees the arrays that actually arrive."""
+    import dataclasses
+
+    from repro.configs.registry import get_config
+    from repro.configs.shapes import ShapeSpec
+    from repro.runtime.data import input_specs
+
+    for family, arch in _family_archs():
+        cfg = get_config(arch).reduced()
+        shape = ShapeSpec(name="t", kind="train", seq_len=32, global_batch=4)
+        specs = input_specs(cfg, shape)
+        ds = SyntheticDataset(cfg, seq_len=shape.seq_len,
+                              global_batch=shape.global_batch)
+        batch = ds.batch(0)
+        assert set(specs) == set(batch), (family, set(specs), set(batch))
+        for key, spec in specs.items():
+            arr = batch[key]
+            assert tuple(spec.shape) == arr.shape, (family, key)
+            assert np.dtype(spec.dtype) == arr.dtype, \
+                f"{family}/{key}: spec {spec.dtype} vs batch {arr.dtype}"
+        # prefill specs are the train specs minus labels — same contract
+        pre = input_specs(cfg, dataclasses.replace(shape, kind="prefill"))
+        for key, spec in pre.items():
+            assert np.dtype(spec.dtype) == batch[key].dtype, (family, key)
+
+
+def test_audio_frames_keyed_per_sample_id():
+    """Frames follow the (seed, sample id) invariant like tokens: different
+    steps get different frames, and any host layout yields the same global
+    batch (the old seed+7 keying gave every step identical frames)."""
+    from repro.configs.registry import get_config
+
+    cfg = get_config("whisper-tiny").reduced()
+    ds = SyntheticDataset(cfg, seq_len=16, global_batch=8, seed=3)
+    f0, f1 = ds.batch(0)["frames"], ds.batch(1)["frames"]
+    assert not np.array_equal(f0, f1), "every step used to repeat frames"
+    assert not np.array_equal(f0[0], f0[1]), "rows must differ per sample id"
+
+    for num_hosts in (2, 4):
+        rebuilt = np.empty_like(f0)
+        for h in range(num_hosts):
+            rebuilt[h::num_hosts] = ds.batch(0, h, num_hosts)["frames"]
+        np.testing.assert_array_equal(rebuilt, f0)
+
+
+def test_audio_frames_independent_of_token_stream():
+    """Frames draw from a distinct Philox stream: the same (seed, sample id)
+    must not replay the token stream's bits as frame content."""
+    from repro.configs.registry import get_config
+
+    cfg = get_config("whisper-tiny").reduced()
+    seed = 3
+    ds = SyntheticDataset(cfg, seq_len=16, global_batch=2, seed=seed)
+    frames = ds.batch(0)["frames"]
+    for sid in (0, 1):
+        g = np.random.Generator(np.random.Philox(key=seed * 1_000_003 + sid))
+        token_stream_normals = g.standard_normal(
+            (cfg.enc_frames, cfg.d_model)).astype(frames.dtype)
+        assert not np.array_equal(frames[sid], token_stream_normals)
+    # and different seeds give different frames for the same sample ids
+    other = SyntheticDataset(cfg, seq_len=16, global_batch=2, seed=seed + 1)
+    assert not np.array_equal(other.batch(0)["frames"], frames)

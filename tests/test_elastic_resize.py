@@ -268,7 +268,8 @@ def test_benchmark_suite_discovery_covers_all_check_modules():
     suites, broken = run_mod.discover_suites()
     assert not broken, broken
     discovered = set(suites)
-    assert {"pipeline_schedules", "context_parallel", "elastic_resize"} <= discovered
+    assert {"pipeline_schedules", "context_parallel", "elastic_resize",
+            "checkpoint_async"} <= discovered
 
     defines_check = {
         p.stem for p in bench_dir.glob("*.py")
