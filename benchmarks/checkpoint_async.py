@@ -50,6 +50,7 @@ def _states(n: int):
     import jax
     import jax.numpy as jnp
 
+    from repro import compat
     from repro.configs.registry import get_config
     from repro.core.strategy import ExecutionPlan, LayerStrategy
     from repro.models import build_model
@@ -66,7 +67,7 @@ def _states(n: int):
     params = hp.init_params(jax.random.PRNGKey(0))
     opt = hp.init_opt_state(params)
 
-    @jax.jit
+    @compat.jit
     def perturb(tree):
         return jax.tree.map(lambda x: x * 1.001 + 0.001, tree)
 

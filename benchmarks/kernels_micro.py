@@ -9,6 +9,8 @@ import time
 import jax
 import jax.numpy as jnp
 
+from repro import compat
+
 
 def _time(fn, *args, iters=5):
     fn(*args).block_until_ready()
@@ -30,7 +32,7 @@ def run() -> list[tuple[str, float, str]]:
     B, S, H, hd = 1, 2048, 4, 64
     q, k, v = (jax.random.normal(k2, (B, S, H, hd), jnp.float32)
                for k2 in jax.random.split(key, 3))
-    fn = jax.jit(lambda a, b, c: chunked_attention(a, b, c, causal=True))
+    fn = compat.jit(lambda a, b, c: chunked_attention(a, b, c, causal=True))
     dt = _time(fn, q, k, v)
     flops = 4 * B * S * S * H * hd
     rows.append(("attention_chunked_ref_2k", dt * 1e6, f"{flops/dt/1e9:.1f}GFLOPs"))
@@ -44,7 +46,7 @@ def run() -> list[tuple[str, float, str]]:
     A = -jnp.exp(jax.random.normal(key, (Hh,)) * 0.3)
     Bm = jax.random.normal(key, (Bs, S2, G, N)) * 0.3
     Cm = jax.random.normal(key, (Bs, S2, G, N)) * 0.3
-    fn2 = jax.jit(lambda *a: ssd_chunked(*a, chunk=64)[0])
+    fn2 = compat.jit(lambda *a: ssd_chunked(*a, chunk=64)[0])
     dt2 = _time(fn2, x, dt_in, A, Bm, Cm)
     rows.append(("ssd_chunked_ref_2k", dt2 * 1e6, f"chunk64"))
 
@@ -53,7 +55,7 @@ def run() -> list[tuple[str, float, str]]:
 
     xx = jax.random.normal(key, (4096, 4096), jnp.float32)
     sc = jnp.ones((4096,))
-    fn3 = jax.jit(rmsnorm_reference)
+    fn3 = compat.jit(rmsnorm_reference)
     dt3 = _time(fn3, xx, sc)
     gbps = xx.size * 4 * 2 / dt3 / 1e9
     rows.append(("rmsnorm_ref_16M", dt3 * 1e6, f"{gbps:.1f}GB/s"))

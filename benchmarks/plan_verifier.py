@@ -1,0 +1,207 @@
+"""Plan-verifier benchmark: checker throughput + a known-bad corpus.
+
+``repro.analysis.plan_check.check_plan`` is the mandatory gate in front of
+the search engine (every winning candidate), the elastic replanner (every
+replan) and ``--validate-only`` — it runs thousands of times per search, so
+it must stay pure-Python cheap.  Two measurements:
+
+* **sweep** — a 1000-plan structural sweep (tp × cp × zero × remat × ga ×
+  pp × schedule combinations over the production mesh shapes) timed
+  end-to-end; ``--check`` asserts it finishes in under a second.
+* **corpus** — one deliberately-broken plan per GALV diagnostic class;
+  ``--check`` asserts every one is flagged with exactly the expected code
+  (and that the paired fixed twin passes), so a verifier regression that
+  silently stops catching a class of bad plans fails CI.
+
+Usage:
+  PYTHONPATH=src python benchmarks/plan_verifier.py           # table
+  PYTHONPATH=src python benchmarks/plan_verifier.py --check   # CI smoke
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import itertools
+import time
+
+N_PLANS = 1000
+SWEEP_TARGET_S = 1.0
+SEQ = 4096
+GLOBAL_BATCH = 256
+
+
+def _setup():
+    from repro.configs.registry import get_config
+    from repro.core.cluster import TPU_V5E_POD
+
+    return get_config("qwen3-14b"), TPU_V5E_POD
+
+
+def _sweep_plans(cfg) -> list:
+    """~N_PLANS structurally diverse plans on the production mesh shapes."""
+    from repro.core.strategy import LayerStrategy, uniform_plan
+
+    combos = itertools.product(
+        (1, 16),                               # tp
+        (1, 4),                                # cp
+        (0, 1, 2, 3),                          # zero
+        ("none", "selective", "full"),         # remat
+        (1, 2, 4, 8),                          # ga
+        ((1, "gpipe", 1), (4, "gpipe", 1), (4, "1f1b", 1)),
+    )
+    plans = []
+    for tp, cp, zero, remat, ga, (pp, sched, virt) in itertools.cycle(combos):
+        if len(plans) >= N_PLANS:
+            break
+        strat = LayerStrategy(tp=tp, cp=cp, zero=zero, remat=remat)
+        shape: tuple = (256 // (tp if tp > 1 else 16) // cp // pp,
+                        tp if tp > 1 else 16)
+        axes: tuple = ("data", "model")
+        if cp > 1:
+            shape, axes = (cp,) + shape, ("cp",) + axes
+        if pp > 1:
+            shape, axes = (pp,) + shape, ("pod",) + axes
+        plans.append(uniform_plan(cfg.name, "t", shape, axes, cfg.num_layers,
+                                  strat, pp=pp, grad_accum=ga,
+                                  pp_schedule=sched, pp_interleave=virt))
+    return plans
+
+
+def _bad_corpus(cfg):
+    """[(label, plan, check_plan kwargs, expected_code), ...] — one entry per
+    diagnostic class the structural checker covers without monkeypatching."""
+    from repro.configs.registry import get_config
+    from repro.core.strategy import LayerStrategy, uniform_plan
+
+    L = cfg.num_layers
+    mk = lambda strat, shape, axes, **kw: uniform_plan(
+        cfg.name, "t", shape, axes, L, strat, **kw)
+    t1 = LayerStrategy()
+    t16 = LayerStrategy(tp=16)
+    ssm = get_config("mamba2-2.7b")
+    out = [
+        ("mesh-overcommit", mk(t16, (32, 16), ("data", "model")),
+         {}, "GALV001"),            # 512 devices on a 256-chip pod
+        ("mesh-malformed", mk(t1, (16, 16), ("data",)), {}, "GALV002"),
+        ("pp-axis-mismatch", mk(t16, (16, 16), ("data", "model"), pp=2,
+                                grad_accum=2), {}, "GALV003"),
+        ("tp-axis-mismatch", mk(LayerStrategy(tp=4), (16, 16),
+                                ("data", "model")), {}, "GALV005"),
+        ("ep-experts-indivisible", mk(LayerStrategy(ep=2), (16, 16),
+                                      ("data", "model")), {}, "GALV006"),
+        ("cp-seq-indivisible", mk(LayerStrategy(cp=4), (4, 4, 16),
+                                  ("cp", "data", "model")),
+         {"seq_len": SEQ - 6}, "GALV010"),
+        ("tp-heads-indivisible", mk(t16, (16, 16), ("data", "model")),
+         {}, "GALV011"),                 # qwen3: 40 heads, tp16 — warning
+        ("batch-dp-indivisible", mk(t1, (16, 16), ("data", "model")),
+         {"global_batch": 8}, "GALV012"),
+        ("ga-batch-indivisible", mk(t16, (16, 16), ("data", "model"),
+                                    grad_accum=3),
+         {"global_batch": GLOBAL_BATCH}, "GALV013"),
+        ("pp-layers-indivisible", mk(t16, (3, 4, 16), ("pod", "data", "model"),
+                                     pp=3, grad_accum=3), {}, "GALV014"),
+        ("pp-schedule-unrealizable", mk(t16, (2, 8, 16),
+                                        ("pod", "data", "model"), pp=2,
+                                        grad_accum=3, pp_schedule="1f1b"),
+         {}, "GALV015"),
+        ("cp-family-unsupported",
+         uniform_plan(ssm.name, "t", (4, 4, 16), ("cp", "data", "model"),
+                      ssm.num_layers, LayerStrategy(cp=4)),
+         {"cfg": ssm}, "GALV031"),
+        ("cp-axis-mismatch", mk(LayerStrategy(cp=4), (4, 4, 16),
+                                ("data", "model", "x")), {}, "GALV032"),
+        ("ckpt-plan-incompatible", mk(t16, (16, 16), ("data", "model")),
+         {"saved_plan": uniform_plan("nemotron-4-15b", "t", (16, 16),
+                                     ("data", "model"), L, t16)}, "GALV050"),
+    ]
+    # GALV030: mixed ring degrees across layers
+    mixed = dataclasses.replace(
+        mk(LayerStrategy(cp=2), (2, 8, 16), ("cp", "data", "model")),
+        layer_strategies=[LayerStrategy(cp=2)] * (L // 2)
+        + [LayerStrategy(cp=4)] * (L - L // 2))
+    out.append(("cp-ring-inconsistent", mixed, {}, "GALV030"))
+    return out
+
+
+def run() -> list[dict]:
+    from repro.analysis import plan_check as pc
+
+    cfg, cluster = _setup()
+    rows: list[dict] = []
+
+    plans = _sweep_plans(cfg)
+    t0 = time.perf_counter()
+    n_ok = 0
+    code_hist: dict[str, int] = {}
+    for plan in plans:
+        report = pc.check_plan(plan, cluster, cfg, seq_len=SEQ,
+                               global_batch=GLOBAL_BATCH)
+        n_ok += report.ok()
+        for c in report.error_codes():
+            code_hist[c] = code_hist.get(c, 0) + 1
+    dt = time.perf_counter() - t0
+    rows.append({"mode": "sweep", "plans": len(plans), "seconds": dt,
+                 "plans_per_s": len(plans) / dt, "ok": n_ok,
+                 "rejected": len(plans) - n_ok, "codes": code_hist})
+
+    corpus = _bad_corpus(cfg)
+    flagged = missed = 0
+    details = []
+    for label, plan, kw, expected in corpus:
+        kw = dict(kw)
+        case_cfg = kw.pop("cfg", cfg)
+        report = pc.check_plan(plan, cluster, case_cfg,
+                               seq_len=kw.pop("seq_len", SEQ), **kw)
+        hit = expected in report.codes()
+        flagged += hit
+        missed += not hit
+        details.append({"case": label, "expected": expected, "hit": hit,
+                        "codes": report.codes()})
+    rows.append({"mode": "corpus", "cases": len(corpus), "flagged": flagged,
+                 "missed": missed, "details": details})
+    return rows
+
+
+def check(verbose: bool = True) -> list[dict]:
+    """CI smoke: the 1000-plan sweep must verify in under a second and every
+    known-bad plan must be flagged with its expected GALV code."""
+    rows = run()
+    by_mode = {r["mode"]: r for r in rows}
+    sweep, corpus = by_mode["sweep"], by_mode["corpus"]
+    assert sweep["plans"] >= N_PLANS, sweep
+    assert sweep["seconds"] < SWEEP_TARGET_S, (
+        f"{sweep['plans']}-plan sweep took {sweep['seconds']:.2f} s "
+        f"(target < {SWEEP_TARGET_S} s) — check_plan gained a slow path")
+    misses = [d for d in corpus["details"] if not d["hit"]]
+    assert not misses, f"known-bad plans not flagged: {misses}"
+    if verbose:
+        print(f"OK: {sweep['plans']} plans verified in "
+              f"{sweep['seconds'] * 1e3:.0f} ms "
+              f"({sweep['plans_per_s']:,.0f} plans/s; "
+              f"{sweep['rejected']} rejected: {sweep['codes']})")
+        print(f"OK: {corpus['flagged']}/{corpus['cases']} known-bad plans "
+              f"flagged with their expected GALV code")
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--check", action="store_true",
+                    help="CI smoke: sweep under 1 s + full corpus flagged")
+    args = ap.parse_args()
+    if args.check:
+        check()
+        return
+    for r in run():
+        if r["mode"] == "sweep":
+            print(f"sweep,{r['plans']},{r['seconds'] * 1e3:.1f}ms,"
+                  f"{r['plans_per_s']:,.0f}/s,rejected={r['rejected']}")
+        else:
+            for d in r["details"]:
+                print(f"corpus,{d['case']},{d['expected']},"
+                      f"{'hit' if d['hit'] else 'MISS'},{d['codes']}")
+
+
+if __name__ == "__main__":
+    main()

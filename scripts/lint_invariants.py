@@ -1,0 +1,20 @@
+#!/usr/bin/env python
+"""Blocking CI gate: enforce the repo's standing invariants mechanically.
+
+Thin CLI over :mod:`repro.analysis.lint_repo` (stdlib-only — runs in the
+ruff-only CI lint job, no numpy/jax required).  Exit 0 = clean, 1 = violations.
+
+Usage:
+  python scripts/lint_invariants.py            # lint this repository
+  python scripts/lint_invariants.py --root X   # lint a different tree
+"""
+import pathlib
+import sys
+
+_REPO_ROOT = pathlib.Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(_REPO_ROOT / "src"))
+
+from repro.analysis.lint_repo import main  # noqa: E402
+
+if __name__ == "__main__":
+    raise SystemExit(main(default_root=str(_REPO_ROOT)))

@@ -5,6 +5,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import compat
 from repro.configs.registry import ARCH_IDS, get_config
 from repro.models import build_model
 
@@ -22,13 +23,13 @@ for arch in ARCH_IDS:
     if cfg.family == "audio":
         kwargs["frames"] = jnp.zeros((B, cfg.enc_frames, cfg.d_model), jnp.bfloat16)
     try:
-        logits, extra = jax.jit(lambda p, t: model.forward_train(p, t, **kwargs))(params, tokens)
+        logits, extra = compat.jit(lambda p, t: model.forward_train(p, t, **kwargs))(params, tokens)
         exp_s = S + (cfg.vis_tokens if cfg.family == "vlm" else 0)
         assert logits.shape == (B, exp_s, cfg.vocab_size), logits.shape
         assert not np.any(np.isnan(logits)), "NaN in train logits"
         # prefill + decode
-        lg, cache = jax.jit(lambda p, t: model.forward_prefill(p, t, max_len=S + 4, **{k: v for k, v in kwargs.items() if k == "frames"}))(params, tokens)
-        step = jax.jit(lambda p, t, c, i: model.forward_decode(p, t, c, i))
+        lg, cache = compat.jit(lambda p, t: model.forward_prefill(p, t, max_len=S + 4, **{k: v for k, v in kwargs.items() if k == "frames"}))(params, tokens)
+        step = compat.jit(lambda p, t, c, i: model.forward_decode(p, t, c, i))
         lg2, cache = step(params, tokens[:, :1], cache, jnp.int32(S))
         assert lg2.shape == (B, 1, cfg.vocab_size), lg2.shape
         assert not np.any(np.isnan(lg2)), "NaN in decode logits"

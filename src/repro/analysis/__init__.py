@@ -1,0 +1,26 @@
+"""Static analysis for Galvatron — plan verification and repo-invariant lint.
+
+Two passes, two audiences:
+
+* :mod:`repro.analysis.plan_check` verifies an :class:`ExecutionPlan`
+  against a cluster and model config with **zero compilation**, emitting
+  structured diagnostics with stable ``GALV***`` codes.  The search engine,
+  elastic replanner and launch drivers all gate on it.
+* :mod:`repro.analysis.lint_repo` is an AST pass over the repository
+  enforcing the standing ROADMAP constraints (compat-shim routing, the
+  hypothesis shim, explicit ParamDef scales) — ``scripts/lint_invariants.py``
+  is its CLI and a blocking CI step.
+
+This ``__init__`` stays import-light on purpose: the linter must run in a
+bare-stdlib environment (the CI lint job installs no numpy/jax), so nothing
+here may import the heavier verifier eagerly.
+"""
+from __future__ import annotations
+
+
+def __getattr__(name):
+    if name in ("plan_check", "lint_repo", "invariants"):
+        import importlib
+
+        return importlib.import_module(f"{__name__}.{name}")
+    raise AttributeError(name)

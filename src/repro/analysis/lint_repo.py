@@ -1,0 +1,224 @@
+"""Repo-invariant linter — the ROADMAP's standing constraints, machine-checked.
+
+AST-based (stdlib only — the CI lint job installs neither jax nor numpy, so
+this module must import cleanly without them).  Exposed as
+``scripts/lint_invariants.py`` and a blocking CI step.
+
+Rules:
+
+* **compat-jit / compat-shard-map / compat-mesh / compat-cost-analysis** —
+  every version-sensitive JAX API (``jax.jit``, ``jax.shard_map``, ``Mesh(``
+  construction, ``.cost_analysis()``) must route through ``repro/compat.py``.
+  Scope: ``src/repro``, ``benchmarks/``, ``scripts/`` (tests deliberately
+  exercise raw JAX — e.g. ``tests/test_compat.py`` — and are exempt).
+* **hypothesis-shim** — ``hypothesis`` may only be imported by
+  ``tests/_prop.py`` (the optional-dependency shim); everything else goes
+  through the shim so the hermetic CI lane still collects.
+* **paramdef-scale** — every ``ParamDef`` constructed with a literal shape of
+  rank >= 3 must pass an explicit ``scale=`` (or a zeros/ones init): the
+  fan-in heuristic reads ``shape[-2]``, which is wrong for stacked/expert
+  projections (the zamba2 PR 1 bug).
+"""
+from __future__ import annotations
+
+import argparse
+import ast
+import dataclasses
+import pathlib
+from typing import Iterable, Optional
+
+SKIP_DIRS = {".git", "__pycache__", ".claude", "results", ".github",
+             "node_modules", ".venv"}
+
+#: rules enforcing compat.py routing (not applied to tests/ or compat.py)
+COMPAT_RULES = ("compat-jit", "compat-shard-map", "compat-mesh",
+                "compat-cost-analysis")
+
+
+@dataclasses.dataclass(frozen=True)
+class LintViolation:
+    path: str                   # repo-root-relative, posix separators
+    line: int
+    col: int
+    rule: str
+    message: str
+
+    def __str__(self) -> str:
+        return f"{self.path}:{self.line}:{self.col}: [{self.rule}] {self.message}"
+
+
+def _rules_for(rel: pathlib.PurePosixPath) -> frozenset[str]:
+    """Which rules apply to one repo-relative file."""
+    parts = rel.parts
+    if str(rel) == "src/repro/compat.py":
+        return frozenset({"hypothesis-shim", "paramdef-scale"})
+    if parts and parts[0] == "tests":
+        if str(rel) == "tests/_prop.py":
+            return frozenset()
+        return frozenset({"hypothesis-shim"})
+    return frozenset(COMPAT_RULES) | {"hypothesis-shim", "paramdef-scale"}
+
+
+class _Visitor(ast.NodeVisitor):
+    def __init__(self, rel: str, rules: frozenset[str]):
+        self.rel = rel
+        self.rules = rules
+        self.violations: list[LintViolation] = []
+        self.jax_aliases: set[str] = set()      # names bound to the jax module
+
+    def _flag(self, node: ast.AST, rule: str, message: str) -> None:
+        if rule in self.rules:
+            self.violations.append(LintViolation(
+                self.rel, getattr(node, "lineno", 0),
+                getattr(node, "col_offset", 0), rule, message))
+
+    # ---------------------------------------------------------- imports
+    def visit_Import(self, node: ast.Import) -> None:
+        for alias in node.names:
+            if alias.name == "jax":
+                self.jax_aliases.add(alias.asname or "jax")
+            if (alias.name == "hypothesis"
+                    or alias.name.startswith("hypothesis.")):
+                self._flag(node, "hypothesis-shim",
+                           "import hypothesis via tests/_prop.py (the "
+                           "optional-dependency shim), not directly")
+        self.generic_visit(node)
+
+    def visit_ImportFrom(self, node: ast.ImportFrom) -> None:
+        mod = node.module or ""
+        if mod == "hypothesis" or mod.startswith("hypothesis."):
+            self._flag(node, "hypothesis-shim",
+                       "import hypothesis via tests/_prop.py (the optional-"
+                       "dependency shim), not directly")
+        if mod == "jax":
+            for alias in node.names:
+                if alias.name == "jit":
+                    self._flag(node, "compat-jit",
+                               "import jit via repro.compat (compat.jit), "
+                               "not from jax directly")
+                if alias.name == "shard_map":
+                    self._flag(node, "compat-shard-map",
+                               "import shard_map via repro.compat, not from "
+                               "jax directly")
+        if mod == "jax.experimental.shard_map":
+            self._flag(node, "compat-shard-map",
+                       "use repro.compat.shard_map — it lowers the new "
+                       "signature to whichever JAX is installed")
+        self.generic_visit(node)
+
+    # ---------------------------------------------------------- uses
+    def visit_Attribute(self, node: ast.Attribute) -> None:
+        if (isinstance(node.value, ast.Name)
+                and node.value.id in self.jax_aliases):
+            if node.attr == "jit":
+                self._flag(node, "compat-jit",
+                           "jax.jit bypasses the compat shim — use "
+                           "repro.compat.jit (it filters unsupported flags)")
+            elif node.attr == "shard_map":
+                self._flag(node, "compat-shard-map",
+                           "jax.shard_map bypasses the compat shim — use "
+                           "repro.compat.shard_map")
+        self.generic_visit(node)
+
+    def visit_Call(self, node: ast.Call) -> None:
+        fn = node.func
+        # Mesh(...) construction anywhere outside compat.py
+        name = fn.id if isinstance(fn, ast.Name) else (
+            fn.attr if isinstance(fn, ast.Attribute) else None)
+        if name == "Mesh":
+            self._flag(node, "compat-mesh",
+                       "construct meshes via repro.compat.make_mesh, not "
+                       "Mesh(...) directly")
+        # <expr>.cost_analysis() — version-sensitive return shape
+        if (isinstance(fn, ast.Attribute) and fn.attr == "cost_analysis"
+                and not (isinstance(fn.value, ast.Name)
+                         and fn.value.id == "compat")
+                and not (isinstance(fn.value, ast.Attribute)
+                         and fn.value.attr == "compat")):
+            self._flag(node, "compat-cost-analysis",
+                       ".cost_analysis() returns list-vs-dict across JAX "
+                       "releases — use repro.compat.cost_analysis(obj)")
+        if name == "ParamDef":
+            self._check_paramdef(node)
+        self.generic_visit(node)
+
+    def _check_paramdef(self, node: ast.Call) -> None:
+        shape: Optional[ast.expr] = None
+        if node.args:
+            shape = node.args[0]
+        kw = {k.arg: k.value for k in node.keywords if k.arg is not None}
+        shape = kw.get("shape", shape)
+        if not isinstance(shape, ast.Tuple) or len(shape.elts) < 3:
+            return                      # non-literal or < 3-D: heuristic is fine
+        init = kw.get("init")
+        if (isinstance(init, ast.Constant)
+                and init.value in ("zeros", "ones")):
+            return
+        if "scale" not in kw:
+            self._flag(node, "paramdef-scale",
+                       f"{len(shape.elts)}-D ParamDef without explicit "
+                       "scale= — the fan-in heuristic reads shape[-2], which "
+                       "is wrong for stacked projections (zamba2 rule)")
+
+
+def lint_source(source: str, rel: str,
+                rules: Optional[frozenset[str]] = None) -> list[LintViolation]:
+    """Lint one file's source text (``rel`` is its repo-relative path)."""
+    if rules is None:
+        rules = _rules_for(pathlib.PurePosixPath(rel))
+    if not rules:
+        return []
+    try:
+        tree = ast.parse(source, filename=rel)
+    except SyntaxError as e:
+        return [LintViolation(rel, e.lineno or 0, e.offset or 0,
+                              "syntax-error", str(e.msg))]
+    v = _Visitor(rel, rules)
+    v.visit(tree)
+    return sorted(v.violations, key=lambda x: (x.line, x.col))
+
+
+def iter_py_files(root: pathlib.Path) -> Iterable[pathlib.Path]:
+    for path in sorted(root.rglob("*.py")):
+        if any(part in SKIP_DIRS for part in path.relative_to(root).parts):
+            continue
+        yield path
+
+
+def lint_paths(root: pathlib.Path) -> list[LintViolation]:
+    out: list[LintViolation] = []
+    for path in iter_py_files(root):
+        rel = path.relative_to(root).as_posix()
+        try:
+            source = path.read_text(encoding="utf-8")
+        except (OSError, UnicodeDecodeError) as e:
+            out.append(LintViolation(rel, 0, 0, "unreadable", str(e)))
+            continue
+        out.extend(lint_source(source, rel))
+    return out
+
+
+def main(argv: Optional[list[str]] = None,
+         default_root: str = ".") -> int:
+    ap = argparse.ArgumentParser(
+        description="Enforce the repo's standing invariants (compat-shim "
+                    "routing, hypothesis shim, explicit ParamDef scales).")
+    ap.add_argument("--root", default=default_root,
+                    help="repository root to lint (default: %(default)s)")
+    args = ap.parse_args(argv)
+    root = pathlib.Path(args.root).resolve()
+    if not root.is_dir():
+        print(f"lint_invariants: not a directory: {root}")
+        return 2
+    violations = lint_paths(root)
+    for v in violations:
+        print(v)
+    n_files = sum(1 for _ in iter_py_files(root))
+    status = "FAIL" if violations else "OK"
+    print(f"lint_invariants: {status} — {len(violations)} violation(s) "
+          f"in {n_files} file(s)")
+    return 1 if violations else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -25,6 +25,12 @@ BWD_FLOPS_FACTOR = 2.0          # backward ≈ 2× forward
 DP_OVERLAP = 0.7                # fraction of DP grad comm hidden under bwd
 GRAD_BYTES = 4.0                # fp32 gradient reduction
 
+#: Bytes per element charged for pipeline stage-boundary p2p.  Must equal the
+#: itemsize of parallel/pipeline.py's BOUNDARY_DTYPE (fp32) — the plan
+#: verifier asserts the agreement statically (GALV040), so a dtype change in
+#: either place without the other is caught before anything compiles.
+PIPELINE_BOUNDARY_BYTES_PER_ELEM = 4.0
+
 
 @dataclasses.dataclass(frozen=True)
 class CostEnv:
@@ -224,7 +230,7 @@ def pipeline_boundary_bytes(model_profile: ModelProfile, env: CostEnv,
     dp = env.dp(strat) if strat is not None else env.devices
     cp = max(strat.cp, 1) if strat is not None else 1
     return (model_profile.d_model * model_profile.seq_len
-            * env.micro_batch / dp / cp * 4.0)
+            * env.micro_batch / dp / cp * PIPELINE_BOUNDARY_BYTES_PER_ELEM)
 
 
 def pipeline_extras(model_profile: ModelProfile, env: CostEnv,

@@ -27,6 +27,7 @@ from __future__ import annotations
 import math
 from typing import Optional
 
+from repro.analysis import invariants as inv
 from repro.configs.registry import ModelConfig
 from repro.core.strategy import LayerStrategy, REMAT_POLICIES
 
@@ -56,12 +57,12 @@ def cp_candidates(cfg: ModelConfig, devices: int, *,
         return [1]
     if mesh_constrained_cp is not None:
         ok = (mesh_constrained_cp > 1 and mesh_constrained_cp <= devices
-              and seq_len % (2 * mesh_constrained_cp) == 0)
+              and inv.cp_seq_divisible(seq_len, mesh_constrained_cp))
         return [1] + ([mesh_constrained_cp] if ok else [])
     if max_cp is None:
         return [1]
     return [c for c in _powers_of_two(min(devices, max_cp))
-            if c == 1 or seq_len % (2 * c) == 0]
+            if inv.cp_seq_divisible(seq_len, c)]
 
 
 def candidate_strategies(

@@ -100,9 +100,9 @@ def measure_allreduce(sizes_bytes=None, iters: int = 8) -> FittedComm:
         def f(a):
             return jax.lax.psum(a, "x")
 
-        g = jax.jit(compat.shard_map(f, mesh=mesh,
-                                     in_specs=compat.P("x"),
-                                     out_specs=compat.P()))
+        g = compat.jit(compat.shard_map(f, mesh=mesh,
+                                        in_specs=compat.P("x"),
+                                        out_specs=compat.P()))
         a = jnp.ones((elems,), jnp.float32)
         g(a).block_until_ready()
         ts = []

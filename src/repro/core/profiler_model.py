@@ -288,6 +288,7 @@ def measure_block_time(cfg: ModelConfig, seq_len: int, batch: int = 1,
     profiler; used to validate analytic profiles at CPU scales."""
     import jax
     import jax.numpy as jnp
+    from repro import compat
     from repro.models import build_model
 
     model = build_model(cfg)
@@ -296,12 +297,12 @@ def measure_block_time(cfg: ModelConfig, seq_len: int, batch: int = 1,
         from repro.models.common import init_params
         params = init_params(mamba_block_defs(cfg), jax.random.PRNGKey(0))
         from repro.models.mamba2 import mamba_block_apply
-        fn = jax.jit(lambda p, x: mamba_block_apply(p, x, cfg)[0])
+        fn = compat.jit(lambda p, x: mamba_block_apply(p, x, cfg)[0])
     else:
         from repro.models.common import init_params
         params = init_params(model.block_defs() if hasattr(model, "block_defs")
                              else model.dec_block_defs(), jax.random.PRNGKey(0))
-        fn = jax.jit(lambda p, x: model.block_apply(p, x, mode="train")[0])
+        fn = compat.jit(lambda p, x: model.block_apply(p, x, mode="train")[0])
     x = jnp.zeros((batch, seq_len, cfg.d_model), jnp.bfloat16)
     fn(params, x).block_until_ready()
     times = []

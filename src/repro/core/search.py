@@ -16,6 +16,7 @@ from typing import Optional
 
 import numpy as np
 
+from repro.analysis import plan_check as pc
 from repro.configs.registry import ModelConfig
 from repro.core import cost_model as cm
 from repro.core import memory_model as mm
@@ -35,6 +36,9 @@ class SearchResult:
     search_seconds: float
     evaluated: int                     # (pp, ga) combos costed
     feasible: bool
+    #: GALV code -> count of candidates/plans the static verifier rejected
+    #: (repro.analysis.plan_check) — rejected WITH the code, never costed
+    rejections: dict = dataclasses.field(default_factory=dict)
 
 
 @dataclasses.dataclass
@@ -111,6 +115,7 @@ class SearchEngine:
         best: Optional[ExecutionPlan] = None
         best_time = INF
         evaluated = 0
+        rejections: dict = {}
 
         for pp in pp_options:
             if pp > 1 and (cfg.num_experts or not getattr_supports(cfg)):
@@ -132,7 +137,9 @@ class SearchEngine:
                     plan = self._evaluate(profile, cands, devices, pp, ga, micro,
                                           mesh_axes, mesh_shape, n_buckets,
                                           arch=arch, shape_name=shape_name,
-                                          schedule=sched, interleave=virt)
+                                          schedule=sched, interleave=virt,
+                                          rejections=rejections,
+                                          mesh_constrained=mesh_constrained)
                     if plan is not None and plan.predicted_step_time < best_time:
                         best, best_time = plan, plan.predicted_step_time
 
@@ -153,6 +160,8 @@ class SearchEngine:
                                n_buckets=n_buckets, arch=arch, shape_name=shape_name)
             if res.feasible:
                 res.plan.notes += " | bf16-adam (fp32 states infeasible)"
+            for code, n in rejections.items():
+                res.rejections[code] = res.rejections.get(code, 0) + n
             return dataclasses.replace(res, search_seconds=res.search_seconds + dt)
         if best is None:
             # infeasible everywhere: return max-sharding fallback, flagged
@@ -164,8 +173,10 @@ class SearchEngine:
             best = _mk_plan(arch, shape_name, mesh_shape, mesh_axes, profile, cfg,
                             [fallback] * len(profile.layers), 1,
                             max(grad_accum_options), INF, INF)
-            return SearchResult(best, dt, evaluated, feasible=False)
-        return SearchResult(best, dt, evaluated, feasible=True)
+            return SearchResult(best, dt, evaluated, feasible=False,
+                                rejections=rejections)
+        return SearchResult(best, dt, evaluated, feasible=True,
+                            rejections=rejections)
 
     # ------------------------------------------------------------ schedules
     def _schedules_for(self, pp: int, ga: int,
@@ -195,8 +206,12 @@ class SearchEngine:
     def _evaluate(self, profile: ModelProfile, cands: list, devices: int,
                   pp: int, ga: int, micro: int, mesh_axes, mesh_shape,
                   n_buckets: int, *, arch: str, shape_name: str,
-                  schedule: str = "gpipe", interleave: int = 1):
+                  schedule: str = "gpipe", interleave: int = 1,
+                  rejections: Optional[dict] = None,
+                  mesh_constrained: bool = True):
         cfg = self.cfg
+        if rejections is None:
+            rejections = {}
         layers = profile.layers
         L, C = len(layers), len(cands)
         times = np.full((L, C), INF)
@@ -206,12 +221,14 @@ class SearchEngine:
                          opt_bytes=self.opt_bytes,
                          pp_schedule=schedule, pp_interleave=interleave)
         for ci, s in enumerate(cands):
-            dp = devices // (s.tp * s.cp)
-            if dp * s.tp * s.cp != devices or s.ep > dp:
-                continue
-            if micro % dp != 0:
-                # microbatch must shard evenly over this candidate's DP degree
-                # (fractional per-device samples => GSPMD replication blowup)
+            # static verifier gate: a candidate failing an invariant is
+            # rejected WITH its GALV code, never costed (the pre-verifier
+            # filters here were silent `continue`s)
+            code = pc.check_strategy(s, stage_devices=devices,
+                                     micro_batch=micro, cfg=cfg,
+                                     seq_len=profile.seq_len)
+            if code is not None:
+                rejections[code] = rejections.get(code, 0) + 1
                 continue
             seen_shared: set = set()
             for li, lp in enumerate(layers):
@@ -300,9 +317,28 @@ class SearchEngine:
         per_micro_stage = res.total_time / max(ga, 1) / pp
         step += cm.pipeline_extras(profile, env_h, per_micro_stage, fixed_choice)
         step += cm.head_time(profile, fixed_choice, env_h)
-        return _mk_plan(arch, shape_name, mesh_shape, mesh_axes, profile, self.cfg,
+        plan = _mk_plan(arch, shape_name, mesh_shape, mesh_axes, profile, self.cfg,
                         strategies, pp, ga, step, mem_total, default=fixed_choice,
                         schedule=schedule, interleave=interleave)
+        # mandatory full-plan verification: a winning DP assignment that
+        # still violates an invariant is rejected with its code(s), not
+        # silently returned.  The caller's mesh is ground truth for the
+        # search (multi-pod dry-runs exceed one pod's chip count), so the
+        # capacity bound is widened to the mesh — --validate-only and the
+        # elastic replan police real capacity.
+        cl = self.cluster
+        if plan.num_devices > cl.chips:
+            cl = dataclasses.replace(cl, chips=plan.num_devices)
+        report = pc.check_plan(
+            plan, cl, cfg, seq_len=profile.seq_len,
+            global_batch=micro * ga, profile=profile,
+            profile_strategies=strategies, opt_bytes=self.opt_bytes,
+            mesh_constrained=mesh_constrained)
+        if not report.ok():
+            for rcode in report.error_codes():
+                rejections[rcode] = rejections.get(rcode, 0) + 1
+            return None
+        return plan
 
 
 def getattr_supports(cfg: ModelConfig) -> bool:

@@ -124,6 +124,7 @@ def run_cell(arch: str, shape_id: str, *, multi_pod: bool = False,
              pp: int = 1, pp_schedule: str | None = None,
              pp_interleave: int = 2, cp: int = 1,
              seq_len: int | None = None,
+             validate_only: bool = False,
              out: dict | None = None) -> dict:
     # ``out`` (when given) is mutated in place as stages complete, so a crash
     # mid-cell leaves the caller holding the stages that did succeed
@@ -135,7 +136,9 @@ def run_cell(arch: str, shape_id: str, *, multi_pod: bool = False,
     if pp > 1 and cp > 1:
         raise ValueError("--pp and --cp dry-run cells are separate scenarios")
     if cp > 1:                                       # ring: cp axis = seq shards
-        if spec.seq_len % (2 * cp) != 0:
+        from repro.analysis.invariants import cp_seq_divisible
+
+        if not cp_seq_divisible(spec.seq_len, cp):
             raise ValueError(f"--cp {cp} needs seq_len % (2*cp) == 0; "
                              f"got {spec.seq_len}")
         shape, mesh_tag = _cp_mesh(cp)
@@ -208,6 +211,28 @@ def run_cell(arch: str, shape_id: str, *, multi_pod: bool = False,
                                    notes=plan.notes + f" | forced ga{force_ga}")
     out.update(search_meta)
     out["plan"] = _summarize_plan(plan)
+
+    if validate_only:
+        # static verification only: print the diagnostic table and stop
+        # before anything lowers or compiles
+        from repro.analysis import plan_check as pc
+        from repro.core.cluster import TPU_V5E_POD
+        from repro.core.profiler_model import profile_model
+
+        is_train = spec.kind == "train"
+        report = pc.check_plan(
+            plan,
+            dataclasses.replace(TPU_V5E_POD, chips=out["devices"]),
+            cfg, seq_len=spec.seq_len,
+            global_batch=spec.global_batch if is_train else None,
+            profile=profile_model(cfg, spec.seq_len) if is_train else None)
+        print(report.format_table())
+        out["validate_only"] = {"ok": report.ok(), "codes": report.codes()}
+        if not report.ok():
+            raise ValueError("plan verification failed: "
+                             + ", ".join(report.error_codes()))
+        return out
+
     model = build_model(cfg)
 
     # ------------------------------------------------------ build + lower
@@ -329,6 +354,10 @@ def main():
     ap.add_argument("--seq-len", type=int, default=None,
                     help="override the shape's sequence length (long-context "
                          "cells, e.g. --arch llama3.2-1b-long --seq-len 32768)")
+    ap.add_argument("--validate-only", action="store_true",
+                    help="statically verify the plan (repro.analysis."
+                         "plan_check) and print the GALV diagnostic table — "
+                         "nothing lowers or compiles; exit 1 on any error")
     ap.add_argument("--tag", default="", help="output filename suffix")
     args = ap.parse_args()
 
@@ -375,7 +404,8 @@ def main():
                          force_ga=args.force_ga,
                          pp=args.pp, pp_schedule=args.pp_schedule,
                          pp_interleave=args.pp_interleave,
-                         cp=args.cp, seq_len=args.seq_len, out=res)
+                         cp=args.cp, seq_len=args.seq_len,
+                         validate_only=args.validate_only, out=res)
             except Exception as e:  # noqa: BLE001
                 failures += 1
                 res["error"] = f"{type(e).__name__}: {e}"

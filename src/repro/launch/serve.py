@@ -12,6 +12,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import compat
 from repro.configs.registry import ARCH_IDS, get_config
 from repro.core.strategy import ExecutionPlan, LayerStrategy
 from repro.models import build_model
@@ -40,11 +41,11 @@ def main(argv=None):
     prompts = jax.random.randint(jax.random.PRNGKey(1),
                                  (args.batch, args.prompt_len), 0, cfg.vocab_size)
     t0 = time.perf_counter()
-    logits, cache = jax.jit(eng.prefill_step)(params, prompts)
+    logits, cache = compat.jit(eng.prefill_step)(params, prompts)
     jax.block_until_ready(logits)
     t_prefill = time.perf_counter() - t0
 
-    decode = jax.jit(eng.decode_step)
+    decode = compat.jit(eng.decode_step)
     tok = jnp.argmax(logits[:, -1, :], axis=-1)[:, None].astype(jnp.int32)
     out = [tok]
     kv_len = jnp.full((args.batch,), args.prompt_len, jnp.int32)

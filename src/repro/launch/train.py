@@ -30,6 +30,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis import plan_check
+from repro.analysis.invariants import cp_seq_divisible
 from repro.configs.registry import ARCH_IDS, ModelConfig, get_config
 from repro.core.search import SearchEngine
 from repro.launch import mesh as mesh_lib
@@ -161,6 +163,11 @@ def main(argv=None):
                     help="how a resize event moves state: 'live' = in-memory "
                          "device_put migration; 'checkpoint' = save/restore "
                          "round trip (the fallback path / equivalence oracle)")
+    ap.add_argument("--validate-only", action="store_true",
+                    help="statically verify the plan (repro.analysis."
+                         "plan_check) and print the GALV diagnostic table — "
+                         "no params are initialized and nothing compiles; "
+                         "exit 1 on any error")
     ap.add_argument("--digest", action="store_true",
                     help="print a deterministic state digest at the end "
                          "(params/opt sums + final loss) — lets two runs be "
@@ -175,7 +182,7 @@ def main(argv=None):
 
     # ---- plan: search the engine even at CPU scale (paper workflow) ------
     if args.cp > 1:
-        if args.seq % (2 * args.cp) != 0:
+        if not cp_seq_divisible(args.seq, args.cp):
             raise SystemExit(f"--cp {args.cp} needs --seq % (2*cp) == 0 "
                              f"(zig-zag split); got seq {args.seq}")
         if cfg.family != "dense":
@@ -193,7 +200,6 @@ def main(argv=None):
                              layer_strategies=[strat] * cfg.num_layers,
                              default_strategy=strat)
         mesh = None
-        hp = construct_hybrid_parallel_model(model, plan, mesh)
     else:
         # staged/ring run: pod axis carries the pipeline, cp axis the
         # ring-attention sequence shards; schedule/cp searched or pinned
@@ -223,15 +229,31 @@ def main(argv=None):
                 f"(pp*interleave) == 0, cp needs seq % (2*cp) == 0)")
         plan = res.plan
         mesh = mesh_lib.make_mesh(shape, axes)
-        if plan.pp > 1:
-            hp = PipelineTrainer(model, plan, mesh)
-        else:
-            hp = construct_hybrid_parallel_model(model, plan, mesh)
     sched = f" pp={plan.pp}/{plan.pp_schedule}" + (
         f"x{plan.pp_interleave}" if plan.pp_interleave > 1 else "") \
         if plan.pp > 1 else ""
     print(f"plan: {plan.default_strategy.short()} ga={plan.grad_accum}{sched} "
           f"groups={len(plan.groups())}")
+
+    if args.validate_only:
+        # static verification only: nothing below this point runs — no param
+        # init, no lowering, no compile
+        import dataclasses
+
+        from repro.core.cluster import TPU_V5E_POD
+        from repro.core.profiler_model import profile_model
+
+        report = plan_check.check_plan(
+            plan, dataclasses.replace(TPU_V5E_POD, chips=plan.num_devices),
+            cfg, seq_len=args.seq, global_batch=args.batch,
+            profile=profile_model(cfg, args.seq))
+        print(report.format_table())
+        raise SystemExit(0 if report.ok() else 1)
+
+    if plan.pp > 1:
+        hp = PipelineTrainer(model, plan, mesh)
+    else:
+        hp = construct_hybrid_parallel_model(model, plan, mesh)
 
     host_rng = jax.random.PRNGKey(0)     # the run's host key; rides CarryState
     params = hp.init_params(host_rng)
@@ -253,6 +275,15 @@ def main(argv=None):
                                         params_like=hp.ungroup(params),
                                         opt_like=opt)
             opt = jax.tree.map(jnp.asarray, restored["opt"])
+        saved_plan = restored.get("plan")
+        if saved_plan is not None:
+            # GALV050: shards reshard freely across meshes, but the
+            # checkpoint must describe THIS model (arch + layer count)
+            incompat = plan_check.check_checkpoint_compat(saved_plan, plan)
+            if incompat:
+                for d in incompat:
+                    print(d)
+                raise SystemExit(1)
         params = hp.place_params(restored["params"])
         start_step = restored["step"]
         print(f"resumed from step {start_step}")

@@ -16,6 +16,8 @@ scalar (jax has no mutable state).
 """
 from __future__ import annotations
 
+import math
+
 import jax
 import jax.numpy as jnp
 
@@ -28,13 +30,19 @@ from repro.parallel.axes import lc
 
 def moe_ffn_defs(cfg: ModelConfig) -> dict:
     d, f, e = cfg.d_model, cfg.d_ff, cfg.num_experts
+    # explicit scales (lint: paramdef-scale): the fan-in heuristic happens to
+    # read the right dim (shape[-2]) for these layouts, but 3-D defs must not
+    # depend on that — written as 1/sqrt(fan_in) to stay bitwise-identical
     defs = {
         "router": ParamDef((d, e), ("embed", "experts"), init="small_normal"),
-        "w_in": ParamDef((e, d, f), ("experts", "embed", "ff")),
-        "w_out": ParamDef((e, f, d), ("experts", "ff", "embed")),
+        "w_in": ParamDef((e, d, f), ("experts", "embed", "ff"),
+                         scale=1.0 / math.sqrt(d)),
+        "w_out": ParamDef((e, f, d), ("experts", "ff", "embed"),
+                          scale=1.0 / math.sqrt(f)),
     }
     if cfg.mlp_type in ("swiglu", "geglu"):
-        defs["w_gate"] = ParamDef((e, d, f), ("experts", "embed", "ff"))
+        defs["w_gate"] = ParamDef((e, d, f), ("experts", "embed", "ff"),
+                                  scale=1.0 / math.sqrt(d))
     if cfg.shared_expert_ff:
         defs["shared"] = ffn.ffn_defs(cfg, cfg.shared_expert_ff)
     return defs

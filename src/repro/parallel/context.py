@@ -64,10 +64,13 @@ NEG_INF = -0.7 * float(np.finfo(np.float32).max)
 
 def validate_cp(seq_len: int, cp: int) -> None:
     """Gate shared by the search engine and the runtime: a cp degree is
-    realizable iff the sequence splits into 2·cp equal zig-zag chunks."""
+    realizable iff the sequence splits into 2·cp equal zig-zag chunks
+    (the same predicate the static verifier checks as GALV010)."""
+    from repro.analysis.invariants import cp_seq_divisible
+
     if cp < 1:
         raise ValueError(f"cp must be >= 1, got {cp}")
-    if cp > 1 and seq_len % (2 * cp) != 0:
+    if not cp_seq_divisible(seq_len, cp):
         raise ValueError(
             f"context parallelism needs seq_len % (2*cp) == 0 for the "
             f"zig-zag split; got seq_len={seq_len}, cp={cp}")

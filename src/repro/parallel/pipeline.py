@@ -54,6 +54,13 @@ import jax.numpy as jnp
 from repro import compat
 from repro.compat import Mesh, NamedSharding, P
 
+#: Stage-boundary activation dtype.  Kept fp32: the backward pass psums the
+#: input cotangent over the pipe axis, and a bf16 all-reduce trips an XLA-CPU
+#: AllReducePromotion crash (and loses precision on real hardware anyway).
+#: The cost model charges ``PIPELINE_BOUNDARY_BYTES_PER_ELEM`` per element
+#: for boundary p2p — the plan verifier (GALV040) asserts the two agree.
+BOUNDARY_DTYPE = jnp.float32
+
 
 def pipeline_forward(
     stage_params,                  # pytree, leaves (S, Lps, ...) — dim0 sharded on axis
@@ -109,7 +116,7 @@ def _forward_shard_map(stage_params, x_micro, stage_fn, *, mesh, axis):
     S = mesh.shape[axis]
     M = x_micro.shape[0]
     in_dtype = x_micro.dtype
-    x_micro = x_micro.astype(jnp.float32)
+    x_micro = x_micro.astype(BOUNDARY_DTYPE)
 
     def body(local_params, xm):
         # local_params leaves: (1, Lps, ...) — this stage's slice
@@ -124,7 +131,7 @@ def _forward_shard_map(stage_params, x_micro, stage_fn, *, mesh, axis):
             mb_idx = jnp.clip(t - 0, 0, M - 1)
             feed = jnp.where(is_first & (t < M), 1.0, 0.0)
             inp = feed * xm[mb_idx] + (1.0 - feed) * recv
-            h = stage_fn(local, inp.astype(in_dtype)).astype(jnp.float32)
+            h = stage_fn(local, inp.astype(in_dtype)).astype(BOUNDARY_DTYPE)
             out_idx = jnp.clip(t - (S - 1), 0, M - 1)
             write = is_last & (t >= S - 1) & (t - (S - 1) < M)
             outs = jax.lax.dynamic_update_index_in_dim(
@@ -163,7 +170,7 @@ def _forward_gspmd(stage_params, x_micro, stage_fn, *, mesh, axis,
     S = mesh.shape[axis]
     M = x_micro.shape[0]
     in_dtype = x_micro.dtype
-    x_micro = x_micro.astype(jnp.float32)
+    x_micro = x_micro.astype(BOUNDARY_DTYPE)
     # boundary blocks are (stage, mb, seq, D): stage on the pipe axis, seq on
     # the caller's cp axis under context parallelism — each device then only
     # holds (and permutes) a seq/cp slice of the stage boundary
@@ -174,7 +181,7 @@ def _forward_gspmd(stage_params, x_micro, stage_fn, *, mesh, axis,
     constrain = lambda a: jax.lax.with_sharding_constraint(a, stage_sharding)
     is_first = (jnp.arange(S) == 0)[:, None, None, None]
 
-    vstage = jax.vmap(lambda p, h: stage_fn(p, h.astype(in_dtype)).astype(jnp.float32))
+    vstage = jax.vmap(lambda p, h: stage_fn(p, h.astype(in_dtype)).astype(BOUNDARY_DTYPE))
 
     def tick(carry, t):
         recv, outs = carry                      # (S, mb, seq, D) / (M, mb, seq, D)
@@ -190,7 +197,7 @@ def _forward_gspmd(stage_params, x_micro, stage_fn, *, mesh, axis,
         return (recv_next, outs), None
 
     outs0 = jnp.zeros_like(x_micro)
-    recv0 = constrain(jnp.zeros((S,) + x_micro.shape[1:], jnp.float32))
+    recv0 = constrain(jnp.zeros((S,) + x_micro.shape[1:], BOUNDARY_DTYPE))
     (_, outs), _ = jax.lax.scan(tick, (recv0, outs0), jnp.arange(M + S - 1))
     return outs
 

@@ -15,6 +15,8 @@ import dataclasses
 import math
 from typing import Optional
 
+from repro.analysis import invariants as inv
+from repro.analysis import plan_check as pc
 from repro.configs.registry import ModelConfig
 from repro.core.cluster import ClusterSpec, TPU_V5E_POD
 from repro.core.search import SearchEngine, SearchResult, getattr_supports
@@ -50,7 +52,7 @@ def surviving_mesh(devices: int, *, model_axis: int = 16,
     while m >= 1:
         data = avail // m
         if global_batch is not None:
-            while data > 1 and global_batch % data != 0:
+            while data > 1 and not inv.batch_shardable(global_batch, data):
                 data -= 1
         cand = (data * m, m, data)
         if best is None or cand > best:
@@ -76,7 +78,8 @@ def replan_pp_candidates(cfg: ModelConfig, devices: int, *,
     if cfg.num_experts or not getattr_supports(cfg):
         return out
     pp = 2
-    while pp <= max_pp and devices // pp >= 1 and cfg.num_layers % pp == 0:
+    while (pp <= max_pp and devices // pp >= 1
+           and inv.pp_layers_divisible(cfg.num_layers, pp)):
         out.append(pp)
         pp *= 2
     return out
@@ -92,7 +95,8 @@ def replan_cp_candidates(cfg: ModelConfig, seq_len: int, devices: int, *,
     if cfg.family != "dense" or seq_len < 4096:
         return out
     cp = 2
-    while cp <= max_cp and devices // cp >= 1 and seq_len % (2 * cp) == 0:
+    while (cp <= max_cp and devices // cp >= 1
+           and inv.cp_seq_divisible(seq_len, cp)):
         out.append(cp)
         cp *= 2
     return out
@@ -124,14 +128,20 @@ def replan(
         for cp in replan_cp_candidates(cfg, seq_len, event.new_devices // pp):
             mesh_shape, mesh_axes = surviving_mesh(event.new_devices, pp=pp, cp=cp,
                                                    global_batch=global_batch)
-            engine = SearchEngine(cfg, dataclasses.replace(
-                cluster, chips=int(math.prod(mesh_shape))))
+            sub = dataclasses.replace(cluster, chips=int(math.prod(mesh_shape)))
+            engine = SearchEngine(cfg, sub)
             res = engine.search(seq_len, global_batch, mesh_shape=mesh_shape,
                                 mesh_axes=mesh_axes, pp_options=[pp],
                                 arch=arch, shape_name=shape_name)
             if pp == 1 and cp == 1:
                 best_pp1 = res
             if not res.feasible:
+                continue
+            # verifier veto: never swap live state onto a plan that fails a
+            # structural invariant (the search gates its own winners, but the
+            # replan is the last line before a live migration)
+            if not pc.check_plan(res.plan, sub, cfg, seq_len=seq_len,
+                                 global_batch=global_batch).ok():
                 continue
             if best is None or res.plan.predicted_step_time < best.plan.predicted_step_time:
                 best = res

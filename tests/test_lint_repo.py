@@ -1,0 +1,128 @@
+"""Repo-invariant linter: the repo itself lints clean, each rule fires on a
+minimal fixture (and not on its compliant twin), and the CLI wrapper exits
+nonzero on a fixture tree containing a direct ``jax.jit``."""
+import pathlib
+import subprocess
+import sys
+import textwrap
+
+from repro.analysis.lint_repo import lint_paths, lint_source
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+
+
+def _codes(source, rel="src/repro/somewhere.py"):
+    return [v.rule for v in lint_source(textwrap.dedent(source), rel)]
+
+
+def test_repo_lints_clean():
+    violations = lint_paths(REPO)
+    assert not violations, "\n".join(map(str, violations))
+
+
+# --------------------------------------------------------------- compat-*
+
+def test_direct_jit_flagged_and_compat_jit_clean():
+    assert _codes("import jax\nf = jax.jit(lambda x: x)\n") == ["compat-jit"]
+    assert _codes("import jax as j\nf = j.jit(g)\n") == ["compat-jit"]
+    assert _codes("from jax import jit\n") == ["compat-jit"]
+    assert not _codes("from repro import compat\nf = compat.jit(g)\n")
+
+
+def test_shard_map_and_mesh_rules():
+    assert "compat-shard-map" in _codes(
+        "import jax\ns = jax.shard_map(f, mesh=m)\n")
+    assert "compat-shard-map" in _codes(
+        "from jax.experimental.shard_map import shard_map\n")
+    assert "compat-mesh" in _codes("m = Mesh(devs, ('data',))\n")
+    assert not _codes("m = compat.make_mesh((4,), ('data',))\n")
+
+
+def test_cost_analysis_rule():
+    assert "compat-cost-analysis" in _codes("stats = compiled.cost_analysis()\n")
+    assert not _codes("from repro import compat\nca = compat.cost_analysis(c)\n")
+
+
+def test_compat_module_itself_is_exempt():
+    assert not _codes("import jax\nf = jax.jit(g)\nm = Mesh(d, a)\n",
+                      rel="src/repro/compat.py")
+
+
+def test_tests_exempt_from_compat_rules_but_not_hypothesis():
+    assert not _codes("import jax\nf = jax.jit(g)\n",
+                      rel="tests/test_thing.py")
+    assert _codes("import hypothesis\n", rel="tests/test_thing.py") \
+        == ["hypothesis-shim"]
+
+
+# ---------------------------------------------------------- hypothesis-shim
+
+def test_hypothesis_only_via_prop_shim():
+    assert _codes("from hypothesis import given\n") == ["hypothesis-shim"]
+    assert _codes("from hypothesis.strategies import integers\n") \
+        == ["hypothesis-shim"]
+    assert not _codes("from hypothesis import given\n", rel="tests/_prop.py")
+    assert not _codes("from tests._prop import given, st\n",
+                      rel="tests/test_thing.py")
+
+
+# ------------------------------------------------------------ paramdef-scale
+
+def test_paramdef_3d_needs_explicit_scale():
+    bad = 'd = ParamDef((e, d, f), ("experts", "embed", "ff"))\n'
+    assert _codes(bad) == ["paramdef-scale"]
+    ok = ('d = ParamDef((e, d, f), ("experts", "embed", "ff"), '
+          'scale=1.0 / math.sqrt(d))\n')
+    assert not _codes(ok)
+    # 2-D defs keep the fan-in heuristic; zeros/ones need no scale
+    assert not _codes('d = ParamDef((d, f), ("embed", "ff"))\n')
+    assert not _codes('d = ParamDef((e, d, f), ("a", "b", "c"), init="zeros")\n')
+
+
+# ------------------------------------------------------------------- CLI
+
+def test_cli_exits_nonzero_on_fixture_with_direct_jit(tmp_path):
+    pkg = tmp_path / "src"
+    pkg.mkdir()
+    (pkg / "offender.py").write_text(
+        "import jax\n\nstep = jax.jit(lambda x: x + 1)\n")
+    proc = subprocess.run(
+        [sys.executable, str(REPO / "scripts" / "lint_invariants.py"),
+         "--root", str(tmp_path)],
+        capture_output=True, text=True)
+    assert proc.returncode == 1
+    assert "compat-jit" in proc.stdout and "offender.py" in proc.stdout
+
+
+def test_cli_exits_zero_on_clean_fixture(tmp_path):
+    (tmp_path / "fine.py").write_text(
+        "from repro import compat\n\nstep = compat.jit(lambda x: x + 1)\n")
+    proc = subprocess.run(
+        [sys.executable, str(REPO / "scripts" / "lint_invariants.py"),
+         "--root", str(tmp_path)],
+        capture_output=True, text=True)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "OK" in proc.stdout
+
+
+def test_cli_on_repo_root_is_clean():
+    proc = subprocess.run(
+        [sys.executable, str(REPO / "scripts" / "lint_invariants.py")],
+        capture_output=True, text=True)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+
+
+def test_lint_repo_is_stdlib_only():
+    """The CI lint job installs nothing but ruff — the linter must import
+    without jax/numpy on the path."""
+    proc = subprocess.run(
+        [sys.executable, "-c",
+         "import sys;"
+         "sys.modules['jax'] = None; sys.modules['numpy'] = None;"
+         "sys.path.insert(0, 'src');"
+         "from repro.analysis import lint_repo;"
+         "print(len(lint_repo.lint_source('import jax\\nf=jax.jit(g)', "
+         "'src/x.py')))"],
+        capture_output=True, text=True, cwd=REPO)
+    assert proc.returncode == 0, proc.stderr
+    assert proc.stdout.strip() == "1"

@@ -1,0 +1,267 @@
+"""Static plan verifier: one failing/passing plan pair per GALV code, the
+PR-2 GPipe-OOM regression, and proof the search engine consults the verifier
+(a violating candidate is rejected WITH its code and never costed)."""
+import dataclasses
+
+import pytest
+
+from repro.analysis import invariants as inv
+from repro.analysis import plan_check as pc
+from repro.configs.registry import get_config
+from repro.core import search as search_mod
+from repro.core.cluster import TPU_V5E_POD
+from repro.core.profiler_model import profile_model
+from repro.core.search import SearchEngine
+from repro.core.strategy import ExecutionPlan, LayerStrategy, uniform_plan
+
+CFG = get_config("qwen3-14b")              # dense, 40 layers, 40 heads
+SSM = get_config("mamba2-2.7b")
+SEQ, BATCH = 4096, 256
+
+
+def _mk(strat, shape, axes, cfg=CFG, **kw):
+    return uniform_plan(cfg.name, "t", shape, axes, cfg.num_layers, strat, **kw)
+
+
+def _check(plan, *, cfg=CFG, **kw):
+    kw.setdefault("seq_len", SEQ)
+    return pc.check_plan(plan, TPU_V5E_POD, cfg, **kw)
+
+
+T1 = LayerStrategy()
+T16 = LayerStrategy(tp=16)
+POD = ("pod", "data", "model")
+
+# (code, failing (plan, kwargs), passing twin (plan, kwargs)) — the twin is
+# the minimal edit that clears exactly the exercised invariant
+PAIRS = [
+    ("GALV001",
+     (_mk(T16, (32, 16), ("data", "model")), {}),            # 512 > 256 chips
+     (_mk(T16, (16, 16), ("data", "model")), {})),
+    ("GALV001",                                              # stage tiling
+     (_mk(LayerStrategy(tp=3), (16, 16), ("data", "model")), {}),
+     (_mk(LayerStrategy(tp=16), (16, 16), ("data", "model")), {})),
+    ("GALV002",
+     (_mk(T1, (16, 16), ("data",)), {}),                     # rank mismatch
+     (_mk(T1, (16, 16), ("data", "model")), {})),
+    ("GALV002",
+     (_mk(T1, (16, 0), ("data", "model")), {}),              # zero-width axis
+     (_mk(T1, (16, 1), ("data", "model")), {})),
+    ("GALV003",
+     (_mk(T16, (16, 16), ("data", "model"), pp=2, grad_accum=2), {}),
+     (_mk(T16, (2, 8, 16), POD, pp=2, grad_accum=2), {})),
+    ("GALV004",
+     (dataclasses.replace(_mk(T1, (16, 16), ("data", "model")),
+                          layer_strategies=[T1] * (CFG.num_layers - 1)), {}),
+     (_mk(T1, (16, 16), ("data", "model")), {})),
+    ("GALV005",
+     (_mk(LayerStrategy(tp=4), (16, 16), ("data", "model")), {}),
+     (_mk(LayerStrategy(tp=4), (64, 4), ("data", "model")), {})),
+    ("GALV006",
+     (_mk(LayerStrategy(ep=2), (16, 16), ("data", "model")), {}),  # dense
+     (_mk(LayerStrategy(ep=2), (16, 16), ("data", "model"),
+          cfg=get_config("grok-1-314b")),
+      {"cfg": get_config("grok-1-314b")})),
+    ("GALV010",
+     (_mk(LayerStrategy(cp=4), (4, 4, 16), ("cp", "data", "model")),
+      {"seq_len": SEQ - 6}),
+     (_mk(LayerStrategy(cp=4), (4, 4, 16), ("cp", "data", "model")),
+      {"seq_len": SEQ})),
+    ("GALV011",
+     (_mk(T16, (16, 16), ("data", "model")), {}),            # 40 heads, tp16
+     (_mk(LayerStrategy(tp=8), (32, 8), ("data", "model")), {})),
+    ("GALV012",
+     (_mk(T1, (16, 16), ("data", "model")), {"global_batch": 8}),
+     (_mk(T1, (16, 16), ("data", "model")), {"global_batch": BATCH})),
+    ("GALV013",
+     (_mk(T16, (16, 16), ("data", "model"), grad_accum=3),
+      {"global_batch": BATCH}),
+     (_mk(T16, (16, 16), ("data", "model"), grad_accum=4),
+      {"global_batch": BATCH})),
+    ("GALV014",
+     (_mk(T16, (3, 4, 16), POD, pp=3, grad_accum=3), {}),    # 40 % 3 != 0
+     (_mk(T16, (4, 4, 16), POD, pp=4, grad_accum=4), {})),
+    ("GALV015",
+     (_mk(T16, (2, 8, 16), POD, pp=2, grad_accum=3, pp_schedule="1f1b"), {}),
+     (_mk(T16, (2, 8, 16), POD, pp=2, grad_accum=4, pp_schedule="1f1b"), {})),
+    ("GALV015",
+     (_mk(T16, (2, 8, 16), POD, pp=2, grad_accum=2,
+          pp_schedule="interleaved", pp_interleave=3), {}),  # 40 % 6 != 0
+     (_mk(T16, (2, 8, 16), POD, pp=2, grad_accum=2,
+          pp_schedule="interleaved", pp_interleave=2), {})),
+    ("GALV030",
+     (dataclasses.replace(
+         _mk(LayerStrategy(cp=2), (2, 16, 8), ("cp", "data", "model")),
+         layer_strategies=[LayerStrategy(cp=2)] * 20
+         + [LayerStrategy(cp=4)] * 20), {}),
+     (_mk(LayerStrategy(cp=2), (2, 16, 8), ("cp", "data", "model")), {})),
+    ("GALV031",
+     (_mk(LayerStrategy(cp=4), (4, 4, 16), ("cp", "data", "model"), cfg=SSM),
+      {"cfg": SSM}),
+     (_mk(LayerStrategy(cp=4), (4, 4, 16), ("cp", "data", "model")), {})),
+    ("GALV032",
+     (_mk(LayerStrategy(cp=4), (4, 4, 16), ("data", "model", "x")), {}),
+     (_mk(LayerStrategy(cp=4), (4, 4, 16), ("cp", "data", "model")), {})),
+    ("GALV050",
+     (_mk(T16, (16, 16), ("data", "model")),
+      {"saved_plan": _mk(T16, (16, 16), ("data", "model"),
+                         cfg=get_config("nemotron-4-15b"))}),
+     (_mk(T16, (16, 16), ("data", "model")),
+      {"saved_plan": _mk(T16, (8, 8), ("data", "model"))})),  # mesh may differ
+]
+
+
+@pytest.mark.parametrize("code,bad,good", PAIRS,
+                         ids=[f"{c}-{i}" for i, (c, _, _) in enumerate(PAIRS)])
+def test_code_pair(code, bad, good):
+    bad_plan, bad_kw = bad
+    good_plan, good_kw = good
+    bad_cfg = bad_kw.pop("cfg", CFG)
+    good_cfg = good_kw.pop("cfg", CFG)
+    assert code in _check(bad_plan, cfg=bad_cfg, **bad_kw).codes()
+    assert code not in _check(good_plan, cfg=good_cfg, **good_kw).codes()
+
+
+def test_diagnostics_carry_severity_and_hint():
+    rep = _check(_mk(T16, (32, 16), ("data", "model")))
+    d = next(d for d in rep.diagnostics if d.code == "GALV001")
+    assert d.severity == "error" and d.hint and d.slug == "mesh-overcommit"
+    # GALV011 is a warning: it degrades, it does not reject
+    rep11 = _check(_mk(T16, (16, 16), ("data", "model")))
+    assert rep11.codes() == ["GALV011"] and rep11.ok()
+
+
+def test_format_table_renders_codes_and_status():
+    rep = _check(_mk(T16, (16, 16), ("data", "model"), grad_accum=3),
+                 global_batch=BATCH)
+    table = rep.format_table()
+    assert "GALV013" in table and "hint:" in table and "FAIL" in table
+    assert "OK (0 diagnostics)" in _check(
+        _mk(T1, (16, 16), ("data", "model"))).format_table()
+
+
+def test_mesh_malformed_short_circuits():
+    """A malformed mesh makes every downstream width lookup meaningless —
+    GALV002 must be the only diagnostic."""
+    rep = _check(_mk(LayerStrategy(cp=4), (16,), ("cp", "data", "model"),
+                     pp=2, grad_accum=3))
+    assert rep.error_codes() == ["GALV002"]
+
+
+# ------------------------------------------------------------- GALV020/040
+
+def test_pr2_gpipe_oom_shape_rejected():
+    """Regression for the PR 2 OOM class: ga=32 × pp=4 under gpipe keeps all
+    32 microbatch activations in flight and blows the 16 GB HBM; the same
+    plan under 1f1b (min(pp, M) in flight) fits.  The verifier must tell
+    them apart statically."""
+    profile = profile_model(CFG, SEQ)
+    strat = LayerStrategy(tp=16, zero=3, remat="full")
+    bad = _mk(strat, (4, 4, 16), POD, pp=4, grad_accum=32,
+              pp_schedule="gpipe")
+    rep = _check(bad, global_batch=BATCH, profile=profile)
+    assert rep.error_codes() == ["GALV020"]
+    good = dataclasses.replace(bad, pp_schedule="1f1b")
+    assert _check(good, global_batch=BATCH, profile=profile).ok()
+
+
+def test_boundary_dtype_mismatch_detected(monkeypatch):
+    """GALV040: the cost model's boundary bytes/elem and the runtime's
+    boundary dtype are checked against each other — drifting either one
+    without the other is caught before anything compiles."""
+    plan = _mk(T16, (2, 8, 16), POD, pp=2, grad_accum=2)
+    assert "GALV040" not in _check(plan).codes()
+    from repro.core import cost_model as cm
+
+    monkeypatch.setattr(cm, "PIPELINE_BOUNDARY_BYTES_PER_ELEM", 2.0)
+    assert "GALV040" in _check(plan).error_codes()
+
+
+def test_cost_model_uses_the_shared_constant():
+    from repro.core import cost_model as cm
+    from repro.core.profiler_model import profile_model as pm
+
+    env = cm.CostEnv(cluster=TPU_V5E_POD, devices=16, pp=2, micro_batch=8,
+                     grad_accum=2)
+    profile = pm(CFG, 512)
+    base = cm.pipeline_boundary_bytes(profile, env, T1)
+    assert base == pytest.approx(
+        profile.d_model * profile.seq_len * env.micro_batch / 16
+        * cm.PIPELINE_BOUNDARY_BYTES_PER_ELEM)
+
+
+# ------------------------------------------------- search engine integration
+
+def test_search_rejects_injected_candidate_with_code_and_never_costs_it(
+        monkeypatch):
+    """The acceptance gate: inject a GALV010-violating candidate (cp=2 with
+    seq % (2·cp) != 0) into the candidate set and prove the search rejects
+    it WITH the code — the cost model never sees it."""
+    cfg = get_config("llama3.2-1b")
+    eng = SearchEngine(cfg)
+    seq = 126                                # 126 % 4 != 0 -> cp=2 invalid
+    profile = eng._profile(seq)
+    bad = LayerStrategy(cp=2)
+    good = LayerStrategy(zero=3, remat="full")
+    costed = []
+    orig = search_mod.cm.layer_step_time
+    monkeypatch.setattr(search_mod.cm, "layer_step_time",
+                        lambda lp, s, env: costed.append(s) or orig(lp, s, env))
+    rejections = {}
+    plan = eng._evaluate(profile, [good, bad], 8, 1, 1, 8,
+                         ("data",), (8,), 1024, arch=cfg.name, shape_name="t",
+                         rejections=rejections)
+    assert rejections.get("GALV010") == 1
+    assert bad not in costed and good in costed
+    assert plan is not None and all(s.cp == 1 for s in plan.layer_strategies)
+
+
+def test_search_result_reports_rejections():
+    res = SearchEngine(CFG).search(SEQ, BATCH, mesh_shape=(16, 16),
+                                   mesh_axes=("data", "model"),
+                                   pp_options=[1])
+    assert res.feasible
+    assert res.rejections and all(c in pc.CATALOG for c in res.rejections)
+
+
+def test_searched_plan_verifies_clean():
+    cfg = get_config("llama3.2-1b")
+    res = SearchEngine(cfg).search(1024, 64, mesh_shape=(4, 4),
+                                   mesh_axes=("data", "model"),
+                                   pp_options=[1])
+    assert res.feasible
+    rep = pc.check_plan(res.plan, TPU_V5E_POD, cfg, seq_len=1024,
+                        global_batch=64, profile=profile_model(cfg, 1024))
+    assert rep.ok(), rep.format_table()
+
+
+def test_replan_produces_verified_plan():
+    from repro.runtime.elastic import ElasticEvent, replan
+
+    cfg = get_config("llama3.2-1b")
+    plan = replan(cfg, ElasticEvent(old_devices=8, new_devices=6),
+                  seq_len=256, global_batch=12)
+    sub = dataclasses.replace(TPU_V5E_POD, chips=plan.num_devices)
+    assert pc.check_plan(plan, sub, cfg, seq_len=256,
+                         global_batch=12).ok()
+
+
+# ------------------------------------------------------ shared predicates
+
+def test_invariants_predicates():
+    assert inv.cp_seq_divisible(4096, 4) and not inv.cp_seq_divisible(4090, 4)
+    assert inv.cp_seq_divisible(7, 1)            # cp=1 never constrains
+    assert inv.pp_layers_divisible(40, 4) and not inv.pp_layers_divisible(40, 3)
+    assert inv.batch_shardable(256, 16) and not inv.batch_shardable(8, 3)
+    assert inv.ga_divides_batch(256, 32) and not inv.ga_divides_batch(256, 3)
+    assert inv.mesh_factorizable(256, 16, 1) == (True, 16)
+    assert inv.mesh_factorizable(256, 3, 1)[0] is False
+    assert inv.heads_shardable(40, 8) and not inv.heads_shardable(40, 16)
+    assert inv.experts_shardable(64, 8, 16)
+    assert not inv.experts_shardable(64, 8, 4)   # ep > dp
+    assert not inv.experts_shardable(0, 2, 16)   # no experts to shard
+
+
+def test_unknown_code_rejected():
+    with pytest.raises(ValueError):
+        pc.Diagnostic("GALV999", "nope")
