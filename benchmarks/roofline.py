@@ -135,6 +135,42 @@ def load_all(pattern: str = "*.json") -> list[dict]:
     return rows
 
 
+def check() -> None:
+    """CI smoke (hermetic): a synthetic dry-run cell must analyze to a
+    well-formed roofline row, skip/error artifacts must be rejected, and any
+    real artifacts on disk must also produce finite rows."""
+    cell = {
+        "arch": "llama3.2-1b", "shape": "train_4k", "mesh": "16x16",
+        "devices": 256,
+        "plan": {"default": "tp1-z3", "grad_accum": 4,
+                 "strategies": {"tp1-z3": 16}},
+        "xla_cost_analysis": {"flops_per_device_scanned": 1e12,
+                              "bytes_per_device_scanned": 2e9},
+        "unrolled": {"flops_global": 5e14},
+        "collectives": {"collective_bytes": 1e9},
+        "memory_analysis": {"temp_size_in_bytes": 8e9,
+                            "argument_size_in_bytes": 4e9},
+        "compile_seconds": 12.5,
+    }
+    row = analyze_cell(cell)
+    assert row is not None
+    terms = {"compute": row["t_compute_s"], "memory": row["t_memory_s"],
+             "collective": row["t_collective_s"]}
+    assert row["dominant"] in terms
+    assert row["roofline_bound_s"] == max(terms.values()) > 0.0
+    assert terms[row["dominant"]] == row["roofline_bound_s"]
+    assert 0.0 < row["useful_flops_frac"] <= 1.5, row["useful_flops_frac"]
+    assert row["flops_analytic"] > 0.0
+    assert analyze_cell({"skipped": True}) is None
+    assert analyze_cell({"error": "compile blew up"}) is None
+    rows = load_all()
+    for r in rows:
+        assert r["roofline_bound_s"] > 0.0, r
+        assert r["dominant"] in ("compute", "memory", "collective"), r
+    print(f"roofline.check OK: synthetic cell dominant={row['dominant']}, "
+          f"{len(rows)} artifact row(s)")
+
+
 def main():
     rows = load_all()
     if not rows:

@@ -3,7 +3,7 @@
 Prints ``name,us_per_call,derived`` CSV rows per the harness contract.
   fig3       — end-to-end speedup vs manually-tuned Megatron/DeepSpeed (Fig. 3)
   search     — strategy-search latency ("within minutes" claim)
-  costmodel  — profiler/cost-model fidelity (measured-vs-analytic ranking)
+  costmodel  — calibration gate: calibrated vs analytic predicted-vs-measured
   kernels    — kernel reference microbenches
   pipeline   — schedule comparison (gpipe/1f1b/interleaved bubble + in-flight)
   cp         — context-parallel ring-attention memory/step-time sweep
@@ -118,7 +118,11 @@ def main() -> None:
     from benchmarks import costmodel_accuracy
 
     acc = costmodel_accuracy.run()
-    rows.append(("costmodel.fidelity", 0.0, f"log_corr={acc['log_corr']:.3f}"))
+    rows.append(("costmodel.fidelity", 0.0,
+                 f"log_corr={acc['log_corr']:.3f}"
+                 f"_ana={acc['ana_log_corr']:.3f}"
+                 f"_abs_log_err={acc['cal_abs_log_err']:.2f}"
+                 f"_ana_err={acc['ana_abs_log_err']:.2f}"))
 
     # ---- kernels -------------------------------------------------------------
     from benchmarks import kernels_micro

@@ -28,6 +28,38 @@ def run() -> list[dict]:
     return rows
 
 
+def check() -> None:
+    """CI smoke: one representative search stays interactive ("within
+    minutes" means a single cell must be seconds, not minutes, at this model
+    scale), both with the analytic defaults and with a measured calibration
+    (the calibrated path must not break or grossly slow the search)."""
+    from repro.core import calibrate as cal
+    from repro.core import profile_cache as pcache
+
+    cfg = get_config("llama3.2-1b")
+    t0 = time.perf_counter()
+    res = SearchEngine(cfg).search(
+        4096, 256, mesh_shape=(16, 16), mesh_axes=("data", "model"),
+        pp_options=[1], arch="llama3.2-1b", shape_name="train_4k")
+    dt = time.perf_counter() - t0
+    assert res.feasible, "search must find a feasible plan on 16x16"
+    assert dt < 120.0, f"search took {dt:.1f}s — no longer interactive"
+
+    calib = cal.Calibration(
+        source="measured", throughput={"bf16": 5e13, "fp32": 2.5e13},
+        bwd_flops_factor=1.8,
+        provenance={"cache_schema": pcache.SCHEMA_VERSION})
+    t0 = time.perf_counter()
+    res_cal = SearchEngine(cfg, calibration=calib).search(
+        4096, 256, mesh_shape=(16, 16), mesh_axes=("data", "model"),
+        pp_options=[1], arch="llama3.2-1b", shape_name="train_4k")
+    dt_cal = time.perf_counter() - t0
+    assert res_cal.feasible, "calibrated search must stay feasible"
+    assert dt_cal < 120.0, f"calibrated search took {dt_cal:.1f}s"
+    print(f"search_latency.check OK: analytic {dt:.2f}s, "
+          f"calibrated {dt_cal:.2f}s")
+
+
 def main():
     print("arch,mesh_constrained_s,free_mode_s,combos,feasible")
     for r in run():

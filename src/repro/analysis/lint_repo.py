@@ -18,6 +18,12 @@ Rules:
   rank >= 3 must pass an explicit ``scale=`` (or a zeros/ones init): the
   fan-in heuristic reads ``shape[-2]``, which is wrong for stacked/expert
   projections (the zamba2 PR 1 bug).
+* **calibration-constant** — cost/memory-model coefficients must be read
+  through ``CostEnv``/``Calibration`` (``repro/core/calibrate.py``), not
+  introduced as fresh module-level numeric constants in
+  ``core/cost_model.py`` / ``core/memory_model.py``.  Dtype/byte-layout
+  facts (``GRAD_BYTES`` etc.) are allowlisted; aliases to ``calibrate``
+  attributes are fine (not literals).
 """
 from __future__ import annotations
 
@@ -33,6 +39,13 @@ SKIP_DIRS = {".git", "__pycache__", ".claude", "results", ".github",
 #: rules enforcing compat.py routing (not applied to tests/ or compat.py)
 COMPAT_RULES = ("compat-jit", "compat-shard-map", "compat-mesh",
                 "compat-cost-analysis")
+
+#: files whose module-level numeric constants are calibration-scoped
+CALIBRATION_SCOPED_FILES = {"src/repro/core/cost_model.py",
+                            "src/repro/core/memory_model.py"}
+#: dtype/byte-layout facts — legitimately fixed, never fitted
+CALIBRATION_CONST_ALLOW = {"GRAD_BYTES", "PIPELINE_BOUNDARY_BYTES_PER_ELEM",
+                           "MASTER_BYTES", "OPT_BYTES"}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -56,7 +69,10 @@ def _rules_for(rel: pathlib.PurePosixPath) -> frozenset[str]:
         if str(rel) == "tests/_prop.py":
             return frozenset()
         return frozenset({"hypothesis-shim"})
-    return frozenset(COMPAT_RULES) | {"hypothesis-shim", "paramdef-scale"}
+    rules = frozenset(COMPAT_RULES) | {"hypothesis-shim", "paramdef-scale"}
+    if str(rel) in CALIBRATION_SCOPED_FILES:
+        rules = rules | {"calibration-constant"}
+    return rules
 
 
 class _Visitor(ast.NodeVisitor):
@@ -71,6 +87,41 @@ class _Visitor(ast.NodeVisitor):
             self.violations.append(LintViolation(
                 self.rel, getattr(node, "lineno", 0),
                 getattr(node, "col_offset", 0), rule, message))
+
+    # ---------------------------------------------------------- module body
+    def visit_Module(self, node: ast.Module) -> None:
+        if "calibration-constant" in self.rules:
+            for stmt in node.body:
+                self._check_calibration_const(stmt)
+        self.generic_visit(node)
+
+    def _check_calibration_const(self, stmt: ast.stmt) -> None:
+        """Flag ``UPPER_NAME = <numeric literal>`` at module level in the
+        cost/memory models — tunable coefficients belong in
+        ``repro.core.calibrate`` where measurement can fit them."""
+        if isinstance(stmt, ast.Assign):
+            targets, value = stmt.targets, stmt.value
+        elif isinstance(stmt, ast.AnnAssign) and stmt.value is not None:
+            targets, value = [stmt.target], stmt.value
+        else:
+            return
+        lit = value
+        if (isinstance(lit, ast.UnaryOp)
+                and isinstance(lit.op, (ast.USub, ast.UAdd))):
+            lit = lit.operand
+        if not (isinstance(lit, ast.Constant)
+                and isinstance(lit.value, (int, float))
+                and not isinstance(lit.value, bool)):
+            return
+        for t in targets:
+            if (isinstance(t, ast.Name) and t.id == t.id.upper()
+                    and t.id not in CALIBRATION_CONST_ALLOW):
+                self._flag(stmt, "calibration-constant",
+                           f"module-level coefficient {t.id} = {lit.value!r} "
+                           "— route it through CostEnv/Calibration "
+                           "(repro.core.calibrate) so measurement can fit "
+                           "it, or allowlist it if it is a dtype/byte-"
+                           "layout fact")
 
     # ---------------------------------------------------------- imports
     def visit_Import(self, node: ast.Import) -> None:
@@ -202,7 +253,8 @@ def main(argv: Optional[list[str]] = None,
          default_root: str = ".") -> int:
     ap = argparse.ArgumentParser(
         description="Enforce the repo's standing invariants (compat-shim "
-                    "routing, hypothesis shim, explicit ParamDef scales).")
+                    "routing, hypothesis shim, explicit ParamDef scales, "
+                    "calibration-scoped cost-model coefficients).")
     ap.add_argument("--root", default=default_root,
                     help="repository root to lint (default: %(default)s)")
     args = ap.parse_args(argv)

@@ -31,6 +31,8 @@ code  slug                      invariant
 032   cp-axis-mismatch          cp>1 needs a "cp" axis of width cp
 040   pp-boundary-dtype-mismatch cost-model bytes/elem == runtime dtype
 050   ckpt-plan-incompatible    checkpoint arch/layout matches new plan
+060   profile-cache-stale       calibration fitted from a current-schema
+                                profile cache
 ====  ========================  ========================================
 
 New invariants MUST land with a code here plus a failing/passing test pair
@@ -94,6 +96,10 @@ CATALOG: dict[str, tuple[str, str, str]] = {
     "GALV050": ("ckpt-plan-incompatible", ERROR,
                 "the checkpoint was written for a different model — resume "
                 "with the matching arch/layer count (meshes may differ)"),
+    "GALV060": ("profile-cache-stale", ERROR,
+                "the calibration was fitted from a profile cache written "
+                "under an older schema — re-run the `profile` subcommand "
+                "to re-measure"),
 }
 
 
@@ -212,6 +218,7 @@ def check_plan(
     opt_bytes: float = 8.0,
     saved_plan: Optional[ExecutionPlan] = None,
     mesh_constrained: bool = True,
+    calibration=None,                  # calibrate.Calibration enables GALV060
 ) -> PlanReport:
     """Statically verify ``plan`` against ``cluster`` and ``cfg``.
 
@@ -220,7 +227,9 @@ def check_plan(
     schedule-aware in-flight-memory check (GALV020);  ``profile_strategies``
     supplies the profile-layer-aligned strategy list when it differs from
     ``plan.layer_strategies`` (the search's pre-coalescing DP assignment);
-    ``saved_plan`` enables the checkpoint-compatibility check (GALV050).
+    ``saved_plan`` enables the checkpoint-compatibility check (GALV050);
+    ``calibration`` (a :class:`~repro.core.calibrate.Calibration`) enables
+    the stale-profile-cache check (GALV060).
     ``mesh_constrained=False`` (the search's free mode, which explores
     degrees on a notional flat mesh) skips the axis-width realizability
     checks GALV003/GALV005/GALV032 — the divisibility, capacity, schedule
@@ -358,6 +367,19 @@ def check_plan(
         d = _boundary_dtype_diag()
         if d is not None:
             diag(d)
+
+    # -- calibration provenance (GALV060) ----------------------------------
+    if calibration is not None:
+        from repro.core import profile_cache
+        prov = getattr(calibration, "provenance", None) or {}
+        sch = prov.get("cache_schema")
+        if sch is not None and sch != profile_cache.SCHEMA_VERSION:
+            diag(Diagnostic(
+                "GALV060",
+                f"calibration was fitted from profile cache "
+                f"{prov.get('path', '<unknown>')} with schema {sch}; current "
+                f"schema is {profile_cache.SCHEMA_VERSION}",
+                where="calibration"))
 
     # -- checkpoint/plan compatibility (GALV050) ---------------------------
     if saved_plan is not None:

@@ -15,15 +15,21 @@ import dataclasses
 import math
 from typing import Optional
 
+from repro.core import calibrate as cal
 from repro.core import profiler_hw as hw
 from repro.core.cluster import ClusterSpec
 from repro.core.dynamic_programming import schedule_windowable
 from repro.core.profiler_model import LayerProfile, ModelProfile
 from repro.core.strategy import LayerStrategy
 
-BWD_FLOPS_FACTOR = 2.0          # backward ≈ 2× forward
-DP_OVERLAP = 0.7                # fraction of DP grad comm hidden under bwd
-GRAD_BYTES = 4.0                # fp32 gradient reduction
+# Tunable coefficients live in repro.core.calibrate (fitted from the profile
+# cache; these aliases are the analytic defaults and keep old import sites
+# working).  Reading them through CostEnv/Calibration is lint-enforced
+# (calibration-constant) — only dtype/byte-layout facts may be fresh
+# module-level numeric constants here.
+BWD_FLOPS_FACTOR = cal.ANALYTIC_BWD_FLOPS_FACTOR
+DP_OVERLAP = cal.ANALYTIC_DP_OVERLAP
+GRAD_BYTES = 4.0                # fp32 gradient reduction (dtype fact)
 
 #: Bytes per element charged for pipeline stage-boundary p2p.  Must equal the
 #: itemsize of parallel/pipeline.py's BOUNDARY_DTYPE (fp32) — the plan
@@ -42,6 +48,8 @@ class CostEnv:
     opt_bytes: float = 8.0        # Adam m+v bytes/param (4.0 = bf16 states)
     pp_schedule: str = "gpipe"    # gpipe | 1f1b | interleaved (strategy.PP_SCHEDULES)
     pp_interleave: int = 1        # virtual stages per physical stage
+    dtype: str = "bf16"           # compute dtype (selects calibrated throughput)
+    calibration: cal.Calibration = cal.DEFAULT_CALIBRATION
 
     def dp(self, strat: LayerStrategy) -> int:
         """Batch-sharding degree: cp takes devices out of the DP pool (a cp
@@ -83,6 +91,21 @@ class CostEnv:
             return float(min(M, self.pp * (1.0 + (v - 1.0) / v)))
         return float(M)                                  # gpipe / unwindowable
 
+    # ------------------------------------------------- calibrated constants
+    def eff_flops(self) -> float:
+        """Attainable FLOP/s for this env's dtype (measured fit, else the
+        analytic peak × efficiency)."""
+        return self.calibration.eff_flops(self.cluster, self.dtype)
+
+    def bwd_factor(self) -> float:
+        return self.calibration.bwd_flops_factor
+
+    def comm_cluster(self) -> ClusterSpec:
+        """Cluster the collective formulas run against: measured link
+        constants substituted when fitted, the analytic cluster otherwise
+        (identity — same object)."""
+        return self.calibration.effective_cluster(self.cluster)
+
 
 def _ceil_frac(dim: int, shards: int) -> float:
     """ceil-padding waste factor for sharding `dim` over `shards`."""
@@ -92,7 +115,7 @@ def _ceil_frac(dim: int, shards: int) -> float:
 
 
 def compute_time(profile: LayerProfile, strat: LayerStrategy, env: CostEnv) -> float:
-    eff = env.cluster.peak_flops * env.cluster.flops_efficiency
+    eff = env.eff_flops()
     fwd = 0.0
     for part in profile.flop_parts:
         tp = strat.tp
@@ -101,9 +124,9 @@ def compute_time(profile: LayerProfile, strat: LayerStrategy, env: CostEnv) -> f
     # every FLOP part scales with the sequence, so cp shards all of them;
     # cp | seq is validated (no ceil waste on the seq dim)
     fwd *= env.local(strat) / eff / max(strat.cp, 1)
-    total = fwd * (1.0 + BWD_FLOPS_FACTOR)
+    total = fwd * (1.0 + env.bwd_factor())
     if strat.remat == "full":
-        total += fwd
+        total += fwd * env.calibration.remat_overhead
     elif strat.remat == "selective":
         total += (profile.flops_quadratic / (strat.tp * max(strat.cp, 1))
                   ) * env.local(strat) / eff
@@ -121,7 +144,7 @@ def tp_comm_time(profile: LayerProfile, strat: LayerStrategy, env: CostEnv) -> f
     n_coll = profile.tp_collectives * 2          # fwd + bwd
     if strat.remat == "full":
         n_coll += profile.tp_collectives         # recompute repeats fwd collectives
-    return n_coll * hw.allreduce_time(nbytes, strat.tp, env.cluster)
+    return n_coll * hw.allreduce_time(nbytes, strat.tp, env.comm_cluster())
 
 
 def cp_comm_time(profile: LayerProfile, strat: LayerStrategy, env: CostEnv) -> float:
@@ -140,10 +163,10 @@ def cp_comm_time(profile: LayerProfile, strat: LayerStrategy, env: CostEnv) -> f
     if cp <= 1 or profile.cp_ring_bytes == 0:
         return 0.0
     hop_bytes = env.local(strat) * profile.cp_ring_bytes / cp / max(strat.tp, 1)
-    eff = env.cluster.peak_flops * env.cluster.flops_efficiency
+    eff = env.eff_flops()
     block_compute = (profile.flops_quadratic / (strat.tp * cp * cp)
                      ) * env.local(strat) / eff
-    hop = hw.ring_hop_time(hop_bytes, env.cluster, intra=True)
+    hop = hw.ring_hop_time(hop_bytes, env.comm_cluster(), intra=True)
     exposed_pass = (cp - 1) * hw.exposed_time(hop, block_compute)
     return 3.0 * exposed_pass         # fwd + bwd-recompute + dk/dv rings
 
@@ -164,13 +187,14 @@ def dp_comm_time(profile: LayerProfile, strat: LayerStrategy, env: CostEnv) -> f
     ep_share = profile.expert_param_count / max(strat.ep * strat.tp, 1)
     p_local = tp_share + ep_share
     grad_bytes = p_local * GRAD_BYTES
+    cl = env.comm_cluster()
     t = 0.0
     if strat.zero <= 1:
         # all-reduce grads (zero-1's RS+AG has identical ring volume)
-        t += hw.allreduce_time(grad_bytes, dp, env.cluster)
+        t += hw.allreduce_time(grad_bytes, dp, cl)
     elif strat.zero == 2:
-        t += hw.reducescatter_time(grad_bytes, dp, env.cluster)
-        t += hw.allgather_time(p_local * 2.0, dp, env.cluster)   # updated bf16 params
+        t += hw.reducescatter_time(grad_bytes, dp, cl)
+        t += hw.allgather_time(p_local * 2.0, dp, cl)   # updated bf16 params
     else:
         # zero-3: params are SHARDED, so every microbatch all-gathers them in
         # fwd and bwd (plus once more under full recompute) — ×grad_accum,
@@ -178,8 +202,8 @@ def dp_comm_time(profile: LayerProfile, strat: LayerStrategy, env: CostEnv) -> f
         # step instead made the search pick zero3+ga16 for grok and the
         # dry-run HLO showed 220 s of all-gathers vs the predicted 20 s.)
         n_ag = 2.0 + (1.0 if strat.remat == "full" else 0.0)
-        t += env.grad_accum * n_ag * hw.allgather_time(p_local * 2.0, dp, env.cluster)
-        t += hw.reducescatter_time(grad_bytes, dp, env.cluster)
+        t += env.grad_accum * n_ag * hw.allgather_time(p_local * 2.0, dp, cl)
+        t += hw.reducescatter_time(grad_bytes, dp, cl)
     return t
 
 
@@ -187,7 +211,7 @@ def ep_comm_time(profile: LayerProfile, strat: LayerStrategy, env: CostEnv) -> f
     if strat.ep <= 1 or profile.ep_a2a_bytes == 0:
         return 0.0
     nbytes = profile.ep_a2a_bytes * env.local(strat)
-    return 2.0 * hw.alltoall_time(nbytes, strat.ep, env.cluster)     # fwd + bwd
+    return 2.0 * hw.alltoall_time(nbytes, strat.ep, env.comm_cluster())  # fwd + bwd
 
 
 def layer_step_time(profile: LayerProfile, strat: LayerStrategy, env: CostEnv) -> float:
@@ -199,8 +223,9 @@ def layer_step_time(profile: LayerProfile, strat: LayerStrategy, env: CostEnv) -
                  + ep_comm_time(profile, strat, env))
     compute_total = env.grad_accum * per_micro
     dp = dp_comm_time(profile, strat, env)
-    bwd_span = compute_total * BWD_FLOPS_FACTOR / (1.0 + BWD_FLOPS_FACTOR)
-    dp_exposed = max(dp - DP_OVERLAP * bwd_span, dp * 0.05)
+    bf = env.bwd_factor()
+    bwd_span = compute_total * bf / (1.0 + bf)
+    dp_exposed = max(dp - env.calibration.dp_overlap * bwd_span, dp * 0.05)
     return compute_total + dp_exposed
 
 
@@ -215,7 +240,7 @@ def transition_time(prev: LayerStrategy, nxt: LayerStrategy,
     nbytes = (profile.seq_len * env.local(nxt) * _d_model(profile) * 2.0
               / max(min(prev.cp, nxt.cp), 1))
     n = max(prev.tp, nxt.tp, prev.cp, nxt.cp, 2)
-    return env.grad_accum * 2.0 * hw.allgather_time(nbytes, n, env.cluster)
+    return env.grad_accum * 2.0 * hw.allgather_time(nbytes, n, env.comm_cluster())
 
 
 def pipeline_boundary_bytes(model_profile: ModelProfile, env: CostEnv,
@@ -250,13 +275,13 @@ def pipeline_extras(model_profile: ModelProfile, env: CostEnv,
     bubble = (env.pp - 1) * per_micro_stage_time / v
     act_bytes = pipeline_boundary_bytes(model_profile, env, strat)
     hops = v * (env.pp - 1) + (v - 1)
-    p2p = 2.0 * env.microbatches() * hops * hw.p2p_time(act_bytes, env.cluster)
+    p2p = 2.0 * env.microbatches() * hops * hw.p2p_time(act_bytes, env.comm_cluster())
     return bubble + p2p
 
 
 def head_time(model_profile: ModelProfile, strat: LayerStrategy, env: CostEnv) -> float:
     """Embed + lm-head + loss, per step (seq-sharded over cp at boundaries)."""
-    eff = env.cluster.peak_flops * env.cluster.flops_efficiency
+    eff = env.eff_flops()
     shards = max(strat.tp, 1) * max(strat.cp, 1)
     per_micro = (model_profile.head_flops * env.local(strat) / shards / eff) * 3.0
     return env.grad_accum * per_micro

@@ -101,7 +101,7 @@ def plan_memory(model_profile: ModelProfile, strategies: list, env: CostEnv,
         total = total / env.pp * 1.0 + fixed_memory(
             model_profile, fixed_strategy or strategies[0], env) * (
             1.0 - 1.0 / env.pp)  # stage share of layers; embed/head on every stage
-    return total * env.cluster.mem_overhead
+    return total * env.cluster.mem_overhead * env.calibration.mem_scale
 
 
 def kv_cache_bytes(cfg, batch: int, seq_len: int) -> float:

@@ -82,20 +82,35 @@ class FittedComm:
         return self.alpha + self.beta * nbytes
 
 
-def measure_allreduce(sizes_bytes=None, iters: int = 8) -> FittedComm:
-    """Fit alpha-beta for psum across the local jax device set."""
+def _elems_for(nbytes: int, itemsize: int, n: int) -> int:
+    """Element count for an ``nbytes`` collective buffer: at least one element
+    per device, rounded down to a multiple of ``n`` so it shards evenly."""
+    elems = max(int(nbytes) // itemsize, n)
+    return (elems // n) * n
+
+
+def measure_allreduce(sizes_bytes=None, iters: int = 8,
+                      dtype: str = "fp32") -> FittedComm:
+    """Fit alpha-beta for psum across the local jax device set.
+
+    On a single device there is no wire: return the exact degenerate fit
+    ``FittedComm(0, 0, r2=1.0)`` instead of regressing jit dispatch noise.
+    """
     import jax
     import jax.numpy as jnp
 
     from repro import compat
 
     n = jax.device_count()
+    if n <= 1:
+        return FittedComm(alpha=0.0, beta=0.0, r2=1.0)
+    jdt = {"fp32": jnp.float32, "bf16": jnp.bfloat16}[dtype]
+    itemsize = jnp.dtype(jdt).itemsize
     sizes_bytes = sizes_bytes or [1 << k for k in range(12, 22, 2)]
     mesh = compat.make_mesh((n,), ("x",))
     xs, ys = [], []
     for sz in sizes_bytes:
-        elems = max(sz // 4, n)
-        elems = (elems // n) * n
+        elems = _elems_for(sz, itemsize, n)
 
         def f(a):
             return jax.lax.psum(a, "x")
@@ -103,14 +118,14 @@ def measure_allreduce(sizes_bytes=None, iters: int = 8) -> FittedComm:
         g = compat.jit(compat.shard_map(f, mesh=mesh,
                                         in_specs=compat.P("x"),
                                         out_specs=compat.P()))
-        a = jnp.ones((elems,), jnp.float32)
+        a = jnp.ones((elems,), jdt)
         g(a).block_until_ready()
         ts = []
         for _ in range(iters):
             t0 = time.perf_counter()
             g(a).block_until_ready()
             ts.append(time.perf_counter() - t0)
-        xs.append(float(elems * 4))
+        xs.append(float(elems * itemsize))
         ys.append(float(np.median(ts)))
     A = np.stack([np.ones_like(xs), np.asarray(xs)], axis=1)
     coef, res, *_ = np.linalg.lstsq(A, np.asarray(ys), rcond=None)

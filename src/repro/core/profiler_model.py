@@ -282,27 +282,32 @@ def profile_model(cfg: ModelConfig, seq_len: int, *, causal_frac: float = 1.0) -
 # measured path (runs on whatever jax devices exist — CPU here)
 # --------------------------------------------------------------------------
 
+def _block_apply_fn(cfg: ModelConfig):
+    """(params, apply) for one transformer/ssm block — the shared substrate
+    of the measured profiler (``apply(p, x) -> y`` is NOT jitted)."""
+    import jax
+    from repro.models import build_model
+    from repro.models.common import init_params
+
+    model = build_model(cfg)
+    if cfg.family in ("ssm", "hybrid"):
+        from repro.models.mamba2 import mamba_block_apply, mamba_block_defs
+        params = init_params(mamba_block_defs(cfg), jax.random.PRNGKey(0))
+        return params, lambda p, x: mamba_block_apply(p, x, cfg)[0]
+    params = init_params(model.block_defs() if hasattr(model, "block_defs")
+                         else model.dec_block_defs(), jax.random.PRNGKey(0))
+    return params, lambda p, x: model.block_apply(p, x, mode="train")[0]
+
+
 def measure_block_time(cfg: ModelConfig, seq_len: int, batch: int = 1,
                        iters: int = 5) -> float:
     """Median wall time of one block forward (jitted) — the paper's measured
     profiler; used to validate analytic profiles at CPU scales."""
-    import jax
     import jax.numpy as jnp
     from repro import compat
-    from repro.models import build_model
 
-    model = build_model(cfg)
-    if cfg.family in ("ssm", "hybrid"):
-        from repro.models.mamba2 import mamba_block_defs
-        from repro.models.common import init_params
-        params = init_params(mamba_block_defs(cfg), jax.random.PRNGKey(0))
-        from repro.models.mamba2 import mamba_block_apply
-        fn = compat.jit(lambda p, x: mamba_block_apply(p, x, cfg)[0])
-    else:
-        from repro.models.common import init_params
-        params = init_params(model.block_defs() if hasattr(model, "block_defs")
-                             else model.dec_block_defs(), jax.random.PRNGKey(0))
-        fn = compat.jit(lambda p, x: model.block_apply(p, x, mode="train")[0])
+    params, apply = _block_apply_fn(cfg)
+    fn = compat.jit(apply)
     x = jnp.zeros((batch, seq_len, cfg.d_model), jnp.bfloat16)
     fn(params, x).block_until_ready()
     times = []
@@ -311,3 +316,83 @@ def measure_block_time(cfg: ModelConfig, seq_len: int, batch: int = 1,
         fn(params, x).block_until_ready()
         times.append(time.perf_counter() - t0)
     return float(np.median(times))
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockMeasurement:
+    """One measured profile-cache cell (see profile_cache.ProfileEntry for
+    field semantics — this is the wire format measure_block hands back)."""
+    fwd_time_s: float
+    bwd_time_s: float
+    remat_extra_s: float
+    peak_bytes: float
+    flops_fwd: float
+    act_bytes_pred: float
+    iters: int
+
+
+def _timed(fn, *args, iters: int = 3) -> float:
+    """Median wall time of ``fn(*args)`` with one warmup call."""
+    import jax
+
+    jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def measure_block(cfg: ModelConfig, seq_len: int, *, batch: int = 1,
+                  iters: int = 3, dtype: str = "bf16",
+                  with_remat: bool = True) -> BlockMeasurement:
+    """Measure one (cfg, seq, batch, dtype) cell for the profile cache:
+    jitted fwd wall time, grad-minus-fwd bwd time, ``jax.checkpoint`` remat
+    overhead, and compiled peak memory (AOT ``memory_analysis``), plus the
+    analytic FLOP/activation bases the calibration fits against."""
+    import jax
+    import jax.numpy as jnp
+    from repro import compat
+
+    jdt = {"fp32": jnp.float32, "bf16": jnp.bfloat16}[dtype]
+    params, apply = _block_apply_fn(cfg)
+    params = jax.tree_util.tree_map(
+        lambda a: a.astype(jdt) if jnp.issubdtype(a.dtype, jnp.floating) else a,
+        params)
+    x = jnp.zeros((batch, seq_len, cfg.d_model), jdt)
+
+    fwd = compat.jit(apply)
+    fwd_t = _timed(fwd, params, x, iters=iters)
+
+    def loss(p, a):
+        return jnp.sum(apply(p, a).astype(jnp.float32))
+
+    grad = compat.jit(jax.grad(loss))
+    total_t = _timed(grad, params, x, iters=iters)
+    bwd_t = max(total_t - fwd_t, 0.0)
+
+    remat_extra = 0.0
+    if with_remat:
+        ck = jax.checkpoint(apply)
+
+        def loss_ck(p, a):
+            return jnp.sum(ck(p, a).astype(jnp.float32))
+
+        grad_ck = compat.jit(jax.grad(loss_ck))
+        remat_extra = max(_timed(grad_ck, params, x, iters=iters) - total_t, 0.0)
+
+    peak = 0.0
+    try:
+        compiled = compat.jit(apply).lower(params, x).compile()
+        mem = compiled.memory_analysis()
+        peak = float(getattr(mem, "temp_size_in_bytes", 0.0) +
+                     getattr(mem, "argument_size_in_bytes", 0.0))
+    except Exception:
+        pass
+
+    lp = profile_model(cfg, seq_len, causal_frac=1.0).layers[0]
+    return BlockMeasurement(
+        fwd_time_s=fwd_t, bwd_time_s=bwd_t, remat_extra_s=remat_extra,
+        peak_bytes=peak, flops_fwd=lp.flops * batch,
+        act_bytes_pred=(lp.act_inner + lp.act_boundary) * batch, iters=iters)

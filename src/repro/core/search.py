@@ -18,6 +18,7 @@ import numpy as np
 
 from repro.analysis import plan_check as pc
 from repro.configs.registry import ModelConfig
+from repro.core import calibrate as cal
 from repro.core import cost_model as cm
 from repro.core import memory_model as mm
 from repro.core.cluster import ClusterSpec, TPU_V5E_POD
@@ -47,6 +48,7 @@ class SearchEngine:
     cluster: ClusterSpec = TPU_V5E_POD
     causal_frac: float = 0.5           # flash kernel skips the upper triangle
     opt_bytes: float = 8.0             # Adam state bytes/param (4.0 = bf16 m,v)
+    calibration: cal.Calibration = cal.DEFAULT_CALIBRATION
 
     # ------------------------------------------------------------ internals
     def _profile(self, seq_len: int) -> ModelProfile:
@@ -219,7 +221,8 @@ class SearchEngine:
         env = cm.CostEnv(cluster=self.cluster, devices=devices, pp=pp,
                          micro_batch=micro, grad_accum=ga,
                          opt_bytes=self.opt_bytes,
-                         pp_schedule=schedule, pp_interleave=interleave)
+                         pp_schedule=schedule, pp_interleave=interleave,
+                         calibration=self.calibration)
         for ci, s in enumerate(cands):
             # static verifier gate: a candidate failing an invariant is
             # rejected WITH its GALV code, never costed (the pre-verifier
@@ -333,7 +336,7 @@ class SearchEngine:
             plan, cl, cfg, seq_len=profile.seq_len,
             global_batch=micro * ga, profile=profile,
             profile_strategies=strategies, opt_bytes=self.opt_bytes,
-            mesh_constrained=mesh_constrained)
+            mesh_constrained=mesh_constrained, calibration=self.calibration)
         if not report.ok():
             for rcode in report.error_codes():
                 rejections[rcode] = rejections.get(rcode, 0) + 1
@@ -360,6 +363,7 @@ def evaluate_uniform(
     pp_interleave: int = 1,
     causal_frac: float = 0.5,
     opt_bytes: float = 8.0,
+    calibration: cal.Calibration = cal.DEFAULT_CALIBRATION,
 ) -> tuple[float, float, bool]:
     """(step_time, per-device memory, feasible) for one uniform strategy —
     used to cost the manually-tuned baseline systems (Fig. 3 benchmark)."""
@@ -372,7 +376,8 @@ def evaluate_uniform(
     env = cm.CostEnv(cluster=cluster, devices=stage_devices, pp=pp,
                      micro_batch=micro, grad_accum=grad_accum,
                      opt_bytes=opt_bytes,
-                     pp_schedule=pp_schedule, pp_interleave=pp_interleave)
+                     pp_schedule=pp_schedule, pp_interleave=pp_interleave,
+                     calibration=calibration)
     t = 0.0
     seen: set = set()
     strategies = []

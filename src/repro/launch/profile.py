@@ -1,0 +1,87 @@
+"""``profile`` subcommand — measure block timings into the profile cache.
+
+Shared by both launchers (``train.py profile ...`` / ``serve.py profile ...``).
+Times real jitted reduced-config blocks per (arch, dtype, seq) cell with
+:func:`repro.core.profiler_model.measure_block`, fits the collective
+alpha-beta with :func:`repro.core.profiler_hw.measure_allreduce`, writes the
+versioned on-disk cache (``results/profiles/<backend>.json``) and prints the
+fitted calibration table.  A second run over the same cells does **zero**
+re-measurement — everything comes from the cache.
+"""
+from __future__ import annotations
+
+import argparse
+
+from repro.configs.registry import ARCH_IDS, get_config
+from repro.core import calibrate as cal
+from repro.core import profile_cache as pcache
+from repro.core import profiler_hw as hw
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="profile",
+        description="measure per-block timings into the profile cache")
+    ap.add_argument("--arch", action="append", choices=ARCH_IDS, default=None,
+                    help="model(s) to profile (repeatable; default llama3.2-1b)")
+    ap.add_argument("--full", action="store_true",
+                    help="profile the full-size config (default: reduced)")
+    ap.add_argument("--seq", default="64,128",
+                    help="comma-separated sequence lengths")
+    ap.add_argument("--dtype", default="fp32,bf16",
+                    help="comma-separated compute dtypes (fp32,bf16)")
+    ap.add_argument("--microbatch", type=int, default=1)
+    ap.add_argument("--iters", type=int, default=3)
+    ap.add_argument("--no-remat", action="store_true",
+                    help="skip the jax.checkpoint remat-overhead measurement")
+    ap.add_argument("--cache", default=None,
+                    help="cache path (default results/profiles/<backend>.json)")
+    ap.add_argument("--force", action="store_true",
+                    help="drop cached entries and re-measure everything")
+    args = ap.parse_args(argv)
+
+    import jax
+
+    backend = jax.default_backend()
+    path = args.cache or pcache.default_path(backend)
+    cache = pcache.ProfileCache.load_or_create(path)
+    if args.force:
+        cache.reset()
+
+    dtypes = [d.strip() for d in args.dtype.split(",") if d.strip()]
+    seqs = [int(s) for s in args.seq.split(",") if s.strip()]
+    cells = []
+    for arch in (args.arch or ["llama3.2-1b"]):
+        cfg = get_config(arch)
+        if not args.full:
+            cfg = cfg.reduced()
+        for dt in dtypes:
+            for seq in seqs:
+                key = pcache.ProfileKey(
+                    backend=backend, model=pcache.model_key(cfg), dtype=dt,
+                    tp=1, cp=1, seq=seq, microbatch=args.microbatch)
+                cells.append((cfg, key))
+
+    measured, cached = cal.run_profile_cells(
+        cells, cache, iters=args.iters, with_remat=not args.no_remat,
+        verbose=True)
+
+    n = jax.device_count()
+    for dt in dtypes:
+        if cache.get_comm(backend, dt, n) is None:
+            fit = hw.measure_allreduce(dtype=dt)
+            cache.put_comm(pcache.CommEntry(
+                backend=backend, dtype=dt, n_devices=n,
+                alpha=fit.alpha, beta=fit.beta, r2=fit.r2))
+        else:
+            cached += 1
+
+    cache.save()
+    print(cal.calibrate(cache).format_table())
+    print(f"profile: {measured} cell(s) measured, {cached} from cache "
+          f"-> {path}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

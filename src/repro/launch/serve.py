@@ -20,6 +20,13 @@ from repro.runtime.serve import ServingEngine
 
 
 def main(argv=None):
+    import sys
+    if argv is None:
+        argv = sys.argv[1:]
+    if argv and argv[0] == "profile":
+        # `serve.py profile ...` — same measured-profiling entry as train.py
+        from repro.launch import profile as profile_cli
+        return profile_cli.main(argv[1:])
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=ARCH_IDS, default="qwen2.5-3b")
     ap.add_argument("--batch", type=int, default=4)

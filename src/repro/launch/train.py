@@ -24,6 +24,7 @@ Examples:
 from __future__ import annotations
 
 import argparse
+import sys
 import time
 
 import jax
@@ -33,6 +34,8 @@ import numpy as np
 from repro.analysis import plan_check
 from repro.analysis.invariants import cp_seq_divisible
 from repro.configs.registry import ARCH_IDS, ModelConfig, get_config
+from repro.core import calibrate
+from repro.core import profile_cache as pcache_lib
 from repro.core.search import SearchEngine
 from repro.launch import mesh as mesh_lib
 from repro.core.strategy import ExecutionPlan, LayerStrategy
@@ -102,7 +105,8 @@ def _apply_resize(cfg, args, event: ElasticEvent, model, hp, plan, params, opt,
     Returns the rebuilt (hp, plan, mesh, params, opt, carry, step_fn); the
     returned carry is the authoritative resume point for the loop."""
     new_plan, spec = replan_and_diff(cfg, event, args.seq, args.batch, plan,
-                                     arch=cfg.name)
+                                     arch=cfg.name,
+                                     profile_cache=args.profile_cache or None)
     print(f"   new plan: {new_plan.default_strategy.short()} "
           f"ga={new_plan.grad_accum} mesh={new_plan.mesh_shape} "
           f"({new_plan.notes.split('|')[-1].strip()})")
@@ -121,6 +125,12 @@ def _apply_resize(cfg, args, event: ElasticEvent, model, hp, plan, params, opt,
 
 
 def main(argv=None):
+    if argv is None:
+        argv = sys.argv[1:]
+    if argv and argv[0] == "profile":
+        # `train.py profile ...` — measured profiling into the on-disk cache
+        from repro.launch import profile as profile_cli
+        return profile_cli.main(argv[1:])
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=ARCH_IDS, default="llama3.2-1b")
     ap.add_argument("--preset", choices=["100m"], default=None)
@@ -173,7 +183,24 @@ def main(argv=None):
                          "(params/opt sums + final loss) — lets two runs be "
                          "compared for bitwise-equivalent training state")
     ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--profile-cache", default="",
+                    help="path to a measured profile cache (see the `profile` "
+                         "subcommand); calibrates the search's cost model — "
+                         "analytic defaults when unset")
     args = ap.parse_args(argv)
+
+    calibration = calibrate.DEFAULT_CALIBRATION
+    if args.profile_cache:
+        try:
+            calibration = calibrate.load_calibration(args.profile_cache)
+        except FileNotFoundError:
+            raise SystemExit(f"--profile-cache {args.profile_cache}: no such "
+                             "file — run the `profile` subcommand first")
+        except (pcache_lib.CorruptProfileCacheError,
+                pcache_lib.StaleProfileCacheError) as e:
+            raise SystemExit(f"--profile-cache: {e}")
+        print(f"calibration: {calibration.source} "
+              f"({args.profile_cache})")
 
     cfg = resolve_cfg(args)
     model = build_model(cfg)
@@ -211,7 +238,7 @@ def main(argv=None):
         if args.pp_schedule != "searched":
             v = args.pp_interleave if args.pp_schedule == "interleaved" else 1
             sched_opts = [(args.pp_schedule, v)]
-        res = SearchEngine(cfg).search(
+        res = SearchEngine(cfg, calibration=calibration).search(
             args.seq, args.batch, mesh_shape=shape, mesh_axes=axes,
             pp_options=[args.pp], pp_schedule_options=sched_opts,
             cp_options=[args.cp] if args.cp > 1 else None,
@@ -246,7 +273,7 @@ def main(argv=None):
         report = plan_check.check_plan(
             plan, dataclasses.replace(TPU_V5E_POD, chips=plan.num_devices),
             cfg, seq_len=args.seq, global_batch=args.batch,
-            profile=profile_model(cfg, args.seq))
+            profile=profile_model(cfg, args.seq), calibration=calibration)
         print(report.format_table())
         raise SystemExit(0 if report.ok() else 1)
 

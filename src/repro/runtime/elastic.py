@@ -18,6 +18,7 @@ from typing import Optional
 from repro.analysis import invariants as inv
 from repro.analysis import plan_check as pc
 from repro.configs.registry import ModelConfig
+from repro.core import calibrate as cal
 from repro.core.cluster import ClusterSpec, TPU_V5E_POD
 from repro.core.search import SearchEngine, SearchResult, getattr_supports
 from repro.core.strategy import ExecutionPlan
@@ -111,6 +112,8 @@ def replan(
     cluster: ClusterSpec = TPU_V5E_POD,
     arch: str = "",
     shape_name: str = "",
+    calibration: Optional[cal.Calibration] = None,
+    profile_cache: Optional[str] = None,
 ) -> ExecutionPlan:
     """Re-search the full (pp × cp × schedule × strategy) space for the
     surviving device count and return the fastest feasible plan.
@@ -121,7 +124,14 @@ def replan(
     could never get it back after a failure — the replanned "optimal" plan
     was either infeasible or strictly worse.  Each candidate (pp, cp) gets
     its own pod/cp-axis mesh; schedules are enumerated by the engine
-    (schedule_space), cp degrees by the mesh's cp axis."""
+    (schedule_space), cp degrees by the mesh's cp axis.
+
+    ``calibration`` (or ``profile_cache``, a path the calibration is loaded
+    from) grounds the replan's cost model in measured timings — the same
+    knob as ``train.py --profile-cache``."""
+    if calibration is None:
+        calibration = (cal.load_calibration(profile_cache)
+                       if profile_cache else cal.DEFAULT_CALIBRATION)
     best: Optional[SearchResult] = None
     best_pp1: Optional[SearchResult] = None
     for pp in replan_pp_candidates(cfg, event.new_devices):
@@ -129,7 +139,7 @@ def replan(
             mesh_shape, mesh_axes = surviving_mesh(event.new_devices, pp=pp, cp=cp,
                                                    global_batch=global_batch)
             sub = dataclasses.replace(cluster, chips=int(math.prod(mesh_shape)))
-            engine = SearchEngine(cfg, sub)
+            engine = SearchEngine(cfg, sub, calibration=calibration)
             res = engine.search(seq_len, global_batch, mesh_shape=mesh_shape,
                                 mesh_axes=mesh_axes, pp_options=[pp],
                                 arch=arch, shape_name=shape_name)
@@ -141,7 +151,8 @@ def replan(
             # structural invariant (the search gates its own winners, but the
             # replan is the last line before a live migration)
             if not pc.check_plan(res.plan, sub, cfg, seq_len=seq_len,
-                                 global_batch=global_batch).ok():
+                                 global_batch=global_batch,
+                                 calibration=calibration).ok():
                 continue
             if best is None or res.plan.predicted_step_time < best.plan.predicted_step_time:
                 best = res

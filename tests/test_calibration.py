@@ -1,0 +1,361 @@
+"""Calibration: fit recovery from synthetic cells, the analytic-default
+identity (zero behavior drift until a measurement is supplied), the
+calibrated CostEnv, comm wire-normalization, the measurement driver's cache
+discipline, and the calibrated search/replan paths."""
+import dataclasses
+import math
+
+import pytest
+
+from repro.configs.registry import get_config
+from repro.core import calibrate as cal
+from repro.core import cost_model as cm
+from repro.core import profile_cache as pcache
+from repro.core import profiler_hw as hw
+from repro.core.cluster import TPU_V5E_POD
+from repro.core.profiler_model import profile_model
+from repro.core.strategy import LayerStrategy
+
+from tests import _mp
+
+
+def _key(**kw) -> pcache.ProfileKey:
+    base = dict(backend="cpu", model="m:L2d128h4f256", dtype="fp32",
+                tp=1, cp=1, seq=64, microbatch=1)
+    base.update(kw)
+    return pcache.ProfileKey(**base)
+
+
+def _synthetic_cache(tmp_path, thr_fp32=2e10, thr_bf16=1e10, bwd=1.8,
+                     remat=0.9, mem_ratio=3.0) -> pcache.ProfileCache:
+    """Cells generated exactly from known coefficients — the fit must
+    recover them."""
+    cache = pcache.ProfileCache(path=tmp_path / "c.json")
+    for dtype, thr in (("fp32", thr_fp32), ("bf16", thr_bf16)):
+        for seq, flops in ((64, 4e7), (128, 8e7), (256, 1.6e8)):
+            fwd = flops / thr
+            cache.put(pcache.ProfileEntry(
+                key=_key(dtype=dtype, seq=seq),
+                fwd_time_s=fwd, bwd_time_s=bwd * fwd,
+                remat_extra_s=remat * fwd, peak_bytes=mem_ratio * 1e5,
+                flops_fwd=flops, act_bytes_pred=1e5, iters=3))
+    return cache
+
+
+# ----------------------------------------------------------------- fitting
+
+def test_fit_recovers_synthetic_coefficients(tmp_path):
+    calib = cal.calibrate(_synthetic_cache(tmp_path))
+    assert calib.source == "measured"
+    assert calib.throughput["fp32"] == pytest.approx(2e10, rel=1e-6)
+    assert calib.throughput["bf16"] == pytest.approx(1e10, rel=1e-6)
+    assert calib.bwd_flops_factor == pytest.approx(1.8, rel=1e-6)
+    assert calib.remat_overhead == pytest.approx(0.9, rel=1e-6)
+    assert calib.mem_scale == pytest.approx(3.0, rel=1e-6)
+    for name in ("throughput[fp32]", "throughput[bf16]",
+                 "bwd_flops_factor", "remat_overhead", "mem_scale"):
+        assert calib.r2[name] == pytest.approx(1.0, abs=1e-6), name
+    # model-scoped fits (the paper's per-model profiling) ride along
+    assert calib.throughput["m:L2d128h4f256|fp32"] == pytest.approx(2e10,
+                                                                    rel=1e-6)
+    assert calib.bwd_by_model["m:L2d128h4f256"] == pytest.approx(1.8,
+                                                                 rel=1e-6)
+    assert calib.bwd_factor("m:L2d128h4f256") == pytest.approx(1.8, rel=1e-6)
+    assert calib.bwd_factor("never-profiled") == calib.bwd_flops_factor
+    assert calib.provenance["cache_schema"] == pcache.SCHEMA_VERSION
+
+
+def test_fit_clamps_pathological_cells(tmp_path):
+    cache = pcache.ProfileCache(path=tmp_path / "c.json")
+    cache.put(pcache.ProfileEntry(
+        key=_key(), fwd_time_s=1e-6, bwd_time_s=1.0,     # bwd/fwd = 1e6
+        remat_extra_s=1.0, peak_bytes=1e12, flops_fwd=1e6,
+        act_bytes_pred=1.0, iters=1))
+    calib = cal.calibrate(cache)
+    assert calib.bwd_flops_factor == cal._BWD_RANGE[1]
+    assert calib.remat_overhead == cal._REMAT_RANGE[1]
+    assert calib.mem_scale == cal._MEM_RANGE[1]
+
+
+def test_empty_cache_stays_analytic(tmp_path):
+    calib = cal.calibrate(pcache.ProfileCache(path=tmp_path / "c.json"))
+    assert calib.source == "analytic"
+    assert calib.bwd_flops_factor == cal.ANALYTIC_BWD_FLOPS_FACTOR
+    assert calib.throughput == {}
+    assert calib.provenance["cache_schema"] == pcache.SCHEMA_VERSION
+
+
+def test_comm_fit_wire_normalization(tmp_path):
+    cache = pcache.ProfileCache(path=tmp_path / "c.json")
+    n, alpha, beta = 8, 4e-5, 2e-11
+    cache.put_comm(pcache.CommEntry(backend="cpu", dtype="fp32", n_devices=n,
+                                    alpha=alpha, beta=beta, r2=0.98))
+    calib = cal.calibrate(cache)
+    # ring all-reduce: beta = 2(n-1)/n / bw  and  alpha = 2(n-1)·lat
+    assert calib.link_bw == pytest.approx(2 * (n - 1) / n / beta)
+    assert calib.link_latency == pytest.approx(alpha / (2 * (n - 1)))
+    eff = calib.effective_cluster(TPU_V5E_POD)
+    assert eff is not TPU_V5E_POD
+    assert eff.intra_bw == pytest.approx(calib.link_bw)
+    assert eff.intra_latency == pytest.approx(calib.link_latency)
+    # single-device fits (alpha=beta=0) must NOT produce a zero-bw cluster
+    cache2 = pcache.ProfileCache(path=tmp_path / "c2.json")
+    cache2.put_comm(pcache.CommEntry(backend="cpu", dtype="fp32", n_devices=1,
+                                     alpha=0.0, beta=0.0, r2=1.0))
+    assert cal.calibrate(cache2).link_bw is None
+
+
+# ------------------------------------------------- analytic-default identity
+
+def test_default_calibration_is_identity():
+    calib = cal.DEFAULT_CALIBRATION
+    assert calib.source == "analytic"
+    assert calib.eff_flops(TPU_V5E_POD, "bf16") == pytest.approx(
+        TPU_V5E_POD.peak_flops * TPU_V5E_POD.flops_efficiency)
+    assert calib.effective_cluster(TPU_V5E_POD) is TPU_V5E_POD
+    assert cm.BWD_FLOPS_FACTOR == cal.ANALYTIC_BWD_FLOPS_FACTOR
+    assert cm.DP_OVERLAP == cal.ANALYTIC_DP_OVERLAP
+
+
+def _env(calibration=cal.DEFAULT_CALIBRATION, **kw):
+    base = dict(cluster=TPU_V5E_POD, devices=16, pp=1, micro_batch=4,
+                grad_accum=2, calibration=calibration)
+    base.update(kw)
+    return cm.CostEnv(**base)
+
+
+def test_calibrated_env_scales_compute_time():
+    lp = profile_model(get_config("llama3.2-1b"), 1024).layers[0]
+    strat = LayerStrategy()
+    base = cm.compute_time(lp, strat, _env())
+    analytic_eff = TPU_V5E_POD.peak_flops * TPU_V5E_POD.flops_efficiency
+    halved = cal.Calibration(source="measured",
+                             throughput={"bf16": analytic_eff / 2.0})
+    assert cm.compute_time(lp, strat, _env(halved)) == pytest.approx(
+        2.0 * base, rel=1e-9)
+    # same coefficients spelled as a measurement == the analytic twin
+    same = cal.Calibration(source="measured",
+                           throughput={"bf16": analytic_eff})
+    assert cm.compute_time(lp, strat, _env(same)) == pytest.approx(base)
+    # dtype selects the fitted throughput
+    fp32_only = cal.Calibration(source="measured",
+                                throughput={"fp32": analytic_eff / 4.0})
+    assert cm.compute_time(lp, strat, _env(fp32_only)) == pytest.approx(base)
+    assert cm.compute_time(
+        lp, strat, _env(fp32_only, dtype="fp32")) == pytest.approx(4.0 * base)
+
+
+def test_calibrated_bwd_and_remat_factors():
+    lp = profile_model(get_config("llama3.2-1b"), 1024).layers[0]
+    none, full = LayerStrategy(remat="none"), LayerStrategy(remat="full")
+    eff = TPU_V5E_POD.peak_flops * TPU_V5E_POD.flops_efficiency
+    fwd = cm.compute_time(lp, none, _env()) / (1.0 + cm.BWD_FLOPS_FACTOR)
+    calib = cal.Calibration(source="measured", bwd_flops_factor=1.0,
+                            remat_overhead=0.5)
+    assert cm.compute_time(lp, none, _env(calib)) == pytest.approx(2.0 * fwd)
+    assert cm.compute_time(lp, full, _env(calib)) == pytest.approx(2.5 * fwd)
+    # analytic remat=full still costs one extra forward
+    assert cm.compute_time(lp, full, _env()) == pytest.approx(
+        fwd * (2.0 + cm.BWD_FLOPS_FACTOR))
+
+
+def test_comm_cluster_substitution_reaches_dp_comm():
+    lp = profile_model(get_config("llama3.2-1b"), 1024).layers[0]
+    strat = LayerStrategy(zero=3)
+    base = cm.dp_comm_time(lp, strat, _env())
+    faster = cal.Calibration(source="measured",
+                             link_bw=TPU_V5E_POD.intra_bw * 10.0,
+                             link_latency=TPU_V5E_POD.intra_latency)
+    assert cm.dp_comm_time(lp, strat, _env(faster)) < base
+
+
+def test_memory_model_mem_scale():
+    from repro.core import memory_model as mm
+
+    cfg = get_config("llama3.2-1b")
+    prof = profile_model(cfg, 1024)
+    strats = [LayerStrategy()] * len(prof.layers)
+    base = mm.plan_memory(prof, strats, _env())
+    scaled = cal.Calibration(source="measured", mem_scale=2.0)
+    assert mm.plan_memory(prof, strats, _env(scaled)) == pytest.approx(
+        2.0 * base, rel=1e-9)
+
+
+# ---------------------------------------------------------- predict + load
+
+def test_predict_entry_time_prefers_model_fit(tmp_path):
+    calib = cal.calibrate(_synthetic_cache(tmp_path, thr_fp32=2e10, bwd=1.8))
+    e = pcache.ProfileEntry(key=_key(seq=512), fwd_time_s=0.0, bwd_time_s=0.0,
+                            remat_extra_s=0.0, peak_bytes=0.0, flops_fwd=3.2e8,
+                            act_bytes_pred=0.0, iters=0)
+    t = cal.predict_entry_time(e, calib, TPU_V5E_POD)
+    assert t == pytest.approx(3.2e8 / 2e10 * 2.8, rel=1e-6)
+
+
+def test_load_calibration_rejects_stale_and_corrupt(tmp_path):
+    import json
+
+    path = tmp_path / "c.json"
+    cache = _synthetic_cache(tmp_path)
+    cache.save()
+    assert cal.load_calibration(path).source == "measured"
+
+    doc = json.loads(path.read_text())
+    doc["schema"] = pcache.SCHEMA_VERSION - 1
+    path.write_text(json.dumps(doc))
+    with pytest.raises(pcache.StaleProfileCacheError):
+        cal.load_calibration(path)
+    stale = cal.load_calibration(path, allow_stale=True)
+    assert stale.provenance["cache_schema"] == pcache.SCHEMA_VERSION - 1
+
+    path.write_text("garbage{")
+    with pytest.raises(pcache.CorruptProfileCacheError):
+        cal.load_calibration(path)
+    with pytest.raises(FileNotFoundError):
+        cal.load_calibration(tmp_path / "missing.json")
+
+
+# ------------------------------------------------------- measurement driver
+
+class _StubMeasurement:
+    fwd_time_s, bwd_time_s, remat_extra_s = 1e-3, 2e-3, 5e-4
+    peak_bytes, flops_fwd, act_bytes_pred, iters = 1e6, 1e8, 2e5, 2
+
+
+def _stub_cells(n=3):
+    return [(None, _key(seq=64 * (i + 1))) for i in range(n)]
+
+
+def test_run_profile_cells_measures_then_caches(tmp_path):
+    calls = []
+
+    def stub(cfg, seq, **kw):
+        calls.append(seq)
+        return _StubMeasurement()
+
+    cache = pcache.ProfileCache(path=tmp_path / "c.json")
+    measured, cached = cal.run_profile_cells(_stub_cells(), cache,
+                                             measure_fn=stub)
+    assert (measured, cached) == (3, 0) and len(calls) == 3
+    cache.save()
+
+    back = pcache.ProfileCache.load(cache.path)
+    measured, cached = cal.run_profile_cells(_stub_cells(), back,
+                                             measure_fn=stub)
+    assert (measured, cached) == (0, 3)                # zero re-measurement
+    assert len(calls) == 3
+
+
+def test_run_profile_cells_resets_stale_cache(tmp_path):
+    def stub(cfg, seq, **kw):
+        return _StubMeasurement()
+
+    cache = pcache.ProfileCache(path=tmp_path / "c.json",
+                                loaded_schema=pcache.SCHEMA_VERSION - 1)
+    cache.entries["phantom"] = "stale-garbage"
+    measured, cached = cal.run_profile_cells(_stub_cells(), cache,
+                                             measure_fn=stub)
+    assert (measured, cached) == (3, 0)                # stale entries unused
+    assert not cache.stale
+    assert "phantom" not in cache.entries
+
+
+# -------------------------------------------------------- real measurement
+
+def test_measure_block_real_cell_round_trip(tmp_path):
+    from repro.core.profiler_model import measure_block
+
+    cfg = get_config("llama3.2-1b").reduced()
+    m = measure_block(cfg, 32, batch=1, iters=2, dtype="fp32",
+                      with_remat=False)
+    assert m.fwd_time_s > 0.0 and m.bwd_time_s >= 0.0
+    assert m.flops_fwd > 0.0 and m.act_bytes_pred > 0.0
+    assert m.peak_bytes >= 0.0 and math.isfinite(m.peak_bytes)
+
+    cache = pcache.ProfileCache(path=tmp_path / "cpu.json")
+    key = pcache.ProfileKey(backend="cpu", model=pcache.model_key(cfg),
+                            dtype="fp32", tp=1, cp=1, seq=32, microbatch=1)
+    cal.run_profile_cells([(cfg, key)], cache, iters=2, with_remat=False)
+    cache.save()
+    calib = cal.load_calibration(cache.path)
+    assert calib.source == "measured"
+    assert calib.throughput["fp32"] > 0.0
+
+
+# ----------------------------------------------------- profiler_hw fitting
+
+def test_elems_for_dtype_ladder():
+    assert hw._elems_for(4096, 4, 8) == 1024            # fp32
+    assert hw._elems_for(4096, 2, 8) == 2048            # bf16
+    assert hw._elems_for(3, 4, 8) == 8                  # floor: one per device
+    assert hw._elems_for(4100, 4, 8) % 8 == 0           # shards evenly
+
+
+def test_measure_allreduce_single_device_short_circuit():
+    import jax
+
+    if jax.device_count() != 1:
+        pytest.skip("needs the default single-device CPU config")
+    fit = hw.measure_allreduce(dtype="fp32")
+    assert (fit.alpha, fit.beta, fit.r2) == (0.0, 0.0, 1.0)
+    fit = hw.measure_allreduce(dtype="bf16")
+    assert (fit.alpha, fit.beta, fit.r2) == (0.0, 0.0, 1.0)
+
+
+def test_measure_allreduce_multi_device_fits():
+    _mp.run_with_devices("""
+import jax
+from repro.core import profiler_hw as hw
+fit = hw.measure_allreduce(sizes_bytes=[1 << 14, 1 << 16, 1 << 18], iters=3,
+                           dtype="bf16")
+assert jax.device_count() == 2
+assert fit.beta > 0.0, fit
+assert fit.alpha >= 0.0, fit
+print("fit ok", fit)
+""", n_devices=2)
+
+
+# ------------------------------------------------------- calibrated search
+
+def test_search_accepts_measured_calibration(tmp_path):
+    from repro.core.search import SearchEngine
+
+    cfg = get_config("llama3.2-1b")
+    calib = dataclasses.replace(
+        cal.calibrate(_synthetic_cache(tmp_path)),
+        throughput={"bf16": 5e13, "fp32": 2.5e13})      # plausible accelerator
+    res = SearchEngine(cfg, calibration=calib).search(
+        4096, 256, mesh_shape=(16, 16), mesh_axes=("data", "model"),
+        pp_options=[1], arch=cfg.name)
+    assert res.feasible
+    assert res.plan.predicted_step_time > 0.0
+
+
+def test_search_rejects_stale_calibration(tmp_path):
+    from repro.core.search import SearchEngine
+
+    cfg = get_config("llama3.2-1b")
+    stale = cal.Calibration(
+        source="measured", throughput={"bf16": 5e13},
+        provenance={"cache_schema": pcache.SCHEMA_VERSION - 1})
+    res = SearchEngine(cfg, calibration=stale).search(
+        4096, 256, mesh_shape=(16, 16), mesh_axes=("data", "model"),
+        pp_options=[1], arch=cfg.name)
+    assert not res.feasible
+    assert "GALV060" in res.rejections
+
+
+def test_elastic_replan_accepts_calibration(tmp_path):
+    from repro.runtime.elastic import ElasticEvent, replan
+
+    cfg = get_config("llama3.2-1b")
+    calib = cal.Calibration(source="measured", throughput={"bf16": 5e13},
+                            provenance={"cache_schema": pcache.SCHEMA_VERSION})
+    event = ElasticEvent(old_devices=256, new_devices=128, reason="test")
+    plan = replan(cfg, event, 4096, 256, calibration=calib)
+    assert plan.num_devices <= 128
+
+    cache = _synthetic_cache(tmp_path)
+    cache.save()
+    plan2 = replan(cfg, event, 4096, 256, profile_cache=str(cache.path))
+    assert plan2.num_devices <= 128

@@ -126,3 +126,38 @@ def test_lint_repo_is_stdlib_only():
         capture_output=True, text=True, cwd=REPO)
     assert proc.returncode == 0, proc.stderr
     assert proc.stdout.strip() == "1"
+
+
+# -------------------------------------------------------- calibration-constant
+
+def test_fresh_cost_model_constant_flagged():
+    bad = "NEW_FUDGE_FACTOR = 1.7\n"
+    assert _codes(bad, rel="src/repro/core/cost_model.py") == \
+        ["calibration-constant"]
+    assert _codes(bad, rel="src/repro/core/memory_model.py") == \
+        ["calibration-constant"]
+    # negative literals and annotated assignments are still literals
+    assert _codes("K: float = -0.5\n",
+                  rel="src/repro/core/cost_model.py") == \
+        ["calibration-constant"]
+
+
+def test_calibration_constant_scope_and_allowlist():
+    bad = "NEW_FUDGE_FACTOR = 1.7\n"
+    # the rule is scoped to the cost/memory models only
+    assert _codes(bad, rel="src/repro/core/search.py") == []
+    assert _codes(bad, rel="tests/test_x.py") == []
+    # dtype/byte-layout facts are allowlisted
+    assert _codes("GRAD_BYTES = 4.0\n",
+                  rel="src/repro/core/cost_model.py") == []
+    assert _codes("MASTER_BYTES = 4.0\nOPT_BYTES = 8.0\n",
+                  rel="src/repro/core/memory_model.py") == []
+    # aliases to calibrate attributes are bindings, not fresh literals
+    assert _codes(
+        "from repro.core import calibrate\n"
+        "BWD_FLOPS_FACTOR = calibrate.ANALYTIC_BWD_FLOPS_FACTOR\n",
+        rel="src/repro/core/cost_model.py") == []
+    # lowercase names and non-module-level literals are out of scope
+    assert _codes("eps = 1e-9\n", rel="src/repro/core/cost_model.py") == []
+    assert _codes("def f():\n    SCALE = 2.0\n    return SCALE\n",
+                  rel="src/repro/core/cost_model.py") == []

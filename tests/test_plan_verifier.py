@@ -8,6 +8,8 @@ import pytest
 from repro.analysis import invariants as inv
 from repro.analysis import plan_check as pc
 from repro.configs.registry import get_config
+from repro.core import calibrate as cal_mod
+from repro.core import profile_cache as pcache_mod
 from repro.core import search as search_mod
 from repro.core.cluster import TPU_V5E_POD
 from repro.core.profiler_model import profile_model
@@ -108,6 +110,15 @@ PAIRS = [
                          cfg=get_config("nemotron-4-15b"))}),
      (_mk(T16, (16, 16), ("data", "model")),
       {"saved_plan": _mk(T16, (8, 8), ("data", "model"))})),  # mesh may differ
+    ("GALV060",
+     (_mk(T1, (16, 16), ("data", "model")),
+      {"calibration": cal_mod.Calibration(
+          source="measured",
+          provenance={"cache_schema": pcache_mod.SCHEMA_VERSION - 1})}),
+     (_mk(T1, (16, 16), ("data", "model")),
+      {"calibration": cal_mod.Calibration(
+          source="measured",
+          provenance={"cache_schema": pcache_mod.SCHEMA_VERSION})})),
 ]
 
 

@@ -1,0 +1,154 @@
+"""Profile-cache storage: round-trip, schema-bump invalidation, corrupt-file
+rejection (the CorruptCheckpointError discipline applied to profiles)."""
+import json
+
+import pytest
+
+from repro.core import profile_cache as pcache
+from repro.core.profile_cache import (CommEntry, CorruptProfileCacheError,
+                                      ProfileCache, ProfileEntry, ProfileKey,
+                                      StaleProfileCacheError, model_key)
+
+
+def _key(**kw) -> ProfileKey:
+    base = dict(backend="cpu", model="llama:L2d128h4f256", dtype="fp32",
+                tp=1, cp=1, seq=64, microbatch=1)
+    base.update(kw)
+    return ProfileKey(**base)
+
+
+def _entry(key=None, **kw) -> ProfileEntry:
+    base = dict(fwd_time_s=1e-3, bwd_time_s=2e-3, remat_extra_s=5e-4,
+                peak_bytes=1e6, flops_fwd=1e8, act_bytes_pred=2e5, iters=3)
+    base.update(kw)
+    return ProfileEntry(key=key or _key(), **base)
+
+
+# ---------------------------------------------------------------- round-trip
+
+def test_round_trip(tmp_path):
+    path = tmp_path / "cpu.json"
+    cache = ProfileCache.load_or_create(path)
+    assert not cache.stale and not cache.entries
+    e = _entry()
+    cache.put(e)
+    cache.put_comm(CommEntry(backend="cpu", dtype="fp32", n_devices=8,
+                             alpha=1e-5, beta=2e-11, r2=0.99))
+    cache.save()
+
+    back = ProfileCache.load(path)
+    assert back.get(_key()) == e
+    c = back.get_comm("cpu", "fp32", 8)
+    assert c is not None and c.beta == 2e-11 and c.r2 == 0.99
+    assert back.get_comm("cpu", "bf16", 8) is None
+    assert not back.stale
+
+
+def test_key_mismatch_returns_none(tmp_path):
+    cache = ProfileCache.load_or_create(tmp_path / "c.json")
+    cache.put(_entry())
+    assert cache.get(_key(dtype="bf16")) is None
+    assert cache.get(_key(seq=128)) is None
+    assert cache.get(_key(microbatch=2)) is None
+    assert cache.get(_key()) is not None
+
+
+def test_save_creates_nested_dirs(tmp_path):
+    path = tmp_path / "a" / "b" / "cpu.json"
+    cache = ProfileCache(path=path)
+    cache.put(_entry())
+    cache.save()
+    assert path.exists()
+    assert not path.with_suffix(".json.tmp").exists()   # atomic: tmp renamed
+
+
+def test_load_missing_file_raises():
+    with pytest.raises(FileNotFoundError):
+        ProfileCache.load("/nonexistent/profile/cache.json")
+
+
+def test_model_key_includes_dims():
+    class Cfg:
+        name = "llama3.2-1b"
+        num_layers, d_model, num_heads, d_ff = 2, 128, 4, 256
+
+    class Reduced(Cfg):
+        d_model = 64
+
+    assert model_key(Cfg()) != model_key(Reduced())   # reduced() never aliases
+
+
+# ------------------------------------------------------------ schema staleness
+
+def test_schema_bump_invalidates_entries(tmp_path):
+    path = tmp_path / "cpu.json"
+    cache = ProfileCache(path=path)
+    cache.put(_entry())
+    cache.save()
+    doc = json.loads(path.read_text())
+    doc["schema"] = pcache.SCHEMA_VERSION - 1
+    path.write_text(json.dumps(doc))
+
+    stale = ProfileCache.load(path)
+    assert stale.stale
+    assert stale.loaded_schema == pcache.SCHEMA_VERSION - 1
+    assert not stale.entries and not stale.comm       # dropped, not trusted
+
+    stale.reset()
+    assert not stale.stale
+    assert stale.loaded_schema == pcache.SCHEMA_VERSION
+
+
+def test_save_upgrades_schema(tmp_path):
+    path = tmp_path / "cpu.json"
+    path.write_text(json.dumps({"schema": pcache.SCHEMA_VERSION + 7,
+                                "entries": [], "comm": []}))
+    cache = ProfileCache.load(path)
+    assert cache.stale
+    cache.save()
+    assert not cache.stale
+    assert json.loads(path.read_text())["schema"] == pcache.SCHEMA_VERSION
+
+
+def test_stale_error_message_names_path_and_schema(tmp_path):
+    err = StaleProfileCacheError(tmp_path / "x.json", found=0)
+    assert "x.json" in str(err)
+    assert "schema 0" in str(err)
+    assert "profile" in str(err)                       # points at the fix
+
+
+# ------------------------------------------------------------- corrupt files
+
+@pytest.mark.parametrize("payload", [
+    "{ not json",                                      # truncated/garbage
+    '{"schema": 1, "entries": [{"nope"',               # truncated mid-entry
+    "[1, 2, 3]",                                       # wrong top-level type
+    '"just a string"',
+    '{"entries": [], "comm": []}',                     # missing schema
+    '{"schema": "one"}',                               # non-int schema
+])
+def test_corrupt_files_rejected(tmp_path, payload):
+    path = tmp_path / "bad.json"
+    path.write_text(payload)
+    with pytest.raises(CorruptProfileCacheError) as ei:
+        ProfileCache.load(path)
+    assert "bad.json" in str(ei.value)
+    assert "profile" in str(ei.value)                  # actionable hint
+
+
+def test_malformed_entry_rejected(tmp_path):
+    path = tmp_path / "bad.json"
+    path.write_text(json.dumps({
+        "schema": pcache.SCHEMA_VERSION,
+        "entries": [{"key": {"backend": "cpu"}, "fwd_time_s": 1.0}],
+        "comm": []}))
+    with pytest.raises(CorruptProfileCacheError):
+        ProfileCache.load(path)
+
+
+def test_corrupt_is_not_silently_recreated(tmp_path):
+    """load_or_create must surface corruption, not quietly start fresh."""
+    path = tmp_path / "bad.json"
+    path.write_text("garbage{")
+    with pytest.raises(CorruptProfileCacheError):
+        ProfileCache.load_or_create(path)
