@@ -114,6 +114,10 @@ def _bad_corpus(cfg):
         ("ckpt-plan-incompatible", mk(t16, (16, 16), ("data", "model")),
          {"saved_plan": uniform_plan("nemotron-4-15b", "t", (16, 16),
                                      ("data", "model"), L, t16)}, "GALV050"),
+        ("cost-model-drift",
+         dataclasses.replace(mk(t1, (16, 16), ("data", "model")),
+                             predicted_step_time=0.1),
+         {"measured_step_time": 0.25}, "GALV070"),   # 2.5x the prediction
     ]
     # GALV030: mixed ring degrees across layers
     mixed = dataclasses.replace(

@@ -24,6 +24,9 @@ Rules:
   ``core/cost_model.py`` / ``core/memory_model.py``.  Dtype/byte-layout
   facts (``GRAD_BYTES`` etc.) are allowlisted; aliases to ``calibrate``
   attributes are fine (not literals).
+* **obs-print** — no bare ``print(`` in ``src/repro/runtime/``: runtime
+  telemetry routes through ``repro.obs`` (sink events / ``format_live_line``)
+  so it stays machine-readable; stray prints vanish from run logs.
 """
 from __future__ import annotations
 
@@ -72,6 +75,8 @@ def _rules_for(rel: pathlib.PurePosixPath) -> frozenset[str]:
     rules = frozenset(COMPAT_RULES) | {"hypothesis-shim", "paramdef-scale"}
     if str(rel) in CALIBRATION_SCOPED_FILES:
         rules = rules | {"calibration-constant"}
+    if parts[:3] == ("src", "repro", "runtime"):
+        rules = rules | {"obs-print"}
     return rules
 
 
@@ -191,6 +196,11 @@ class _Visitor(ast.NodeVisitor):
                        "releases — use repro.compat.cost_analysis(obj)")
         if name == "ParamDef":
             self._check_paramdef(node)
+        if isinstance(fn, ast.Name) and fn.id == "print":
+            self._flag(node, "obs-print",
+                       "bare print() in the runtime layer — emit through "
+                       "repro.obs (RunSink event or format_live_line) so "
+                       "telemetry stays machine-readable")
         self.generic_visit(node)
 
     def _check_paramdef(self, node: ast.Call) -> None:

@@ -33,6 +33,8 @@ code  slug                      invariant
 050   ckpt-plan-incompatible    checkpoint arch/layout matches new plan
 060   profile-cache-stale       calibration fitted from a current-schema
                                 profile cache
+070   cost-model-drift          measured step time within a ratio band of
+                                the plan's predicted step time (warning)
 ====  ========================  ========================================
 
 New invariants MUST land with a code here plus a failing/passing test pair
@@ -100,6 +102,10 @@ CATALOG: dict[str, tuple[str, str, str]] = {
                 "the calibration was fitted from a profile cache written "
                 "under an older schema — re-run the `profile` subcommand "
                 "to re-measure"),
+    "GALV070": ("cost-model-drift", WARNING,
+                "measured step time diverges from the plan's prediction "
+                "beyond the drift threshold — re-run the `profile` "
+                "subcommand to recalibrate, then re-search the plan"),
 }
 
 
@@ -219,6 +225,7 @@ def check_plan(
     saved_plan: Optional[ExecutionPlan] = None,
     mesh_constrained: bool = True,
     calibration=None,                  # calibrate.Calibration enables GALV060
+    measured_step_time: Optional[float] = None,  # seconds; enables GALV070
 ) -> PlanReport:
     """Statically verify ``plan`` against ``cluster`` and ``cfg``.
 
@@ -229,7 +236,10 @@ def check_plan(
     ``plan.layer_strategies`` (the search's pre-coalescing DP assignment);
     ``saved_plan`` enables the checkpoint-compatibility check (GALV050);
     ``calibration`` (a :class:`~repro.core.calibrate.Calibration`) enables
-    the stale-profile-cache check (GALV060).
+    the stale-profile-cache check (GALV060);  ``measured_step_time`` (an
+    observed per-step wall time in seconds, e.g. the ``repro.obs`` drift
+    monitor's EMA) enables the cost-model-drift check (GALV070) against
+    ``plan.predicted_step_time``.
     ``mesh_constrained=False`` (the search's free mode, which explores
     degrees on a notional flat mesh) skips the axis-width realizability
     checks GALV003/GALV005/GALV032 — the divisibility, capacity, schedule
@@ -380,6 +390,19 @@ def check_plan(
                 f"{prov.get('path', '<unknown>')} with schema {sch}; current "
                 f"schema is {profile_cache.SCHEMA_VERSION}",
                 where="calibration"))
+
+    # -- cost-model drift (GALV070) ----------------------------------------
+    if measured_step_time is not None and plan.predicted_step_time > 0:
+        from repro.obs.drift import DRIFT_RATIO_THRESHOLD
+        ratio = float(measured_step_time) / plan.predicted_step_time
+        if ratio > DRIFT_RATIO_THRESHOLD or ratio < 1.0 / DRIFT_RATIO_THRESHOLD:
+            diag(Diagnostic(
+                "GALV070",
+                f"measured step time {float(measured_step_time) * 1e3:.1f} ms "
+                f"is {ratio:.2f}x the predicted "
+                f"{plan.predicted_step_time * 1e3:.1f} ms "
+                f"(threshold {DRIFT_RATIO_THRESHOLD}x either way)",
+                where="cost-model"))
 
     # -- checkpoint/plan compatibility (GALV050) ---------------------------
     if saved_plan is not None:

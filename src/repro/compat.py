@@ -236,6 +236,31 @@ def cost_analysis(computation) -> dict:
 # jit flag filtering
 # ---------------------------------------------------------------------------
 
+# ---------------------------------------------------------------------------
+# profiler / naming annotations
+# ---------------------------------------------------------------------------
+
+def trace_annotation(name: str):
+    """``jax.profiler.TraceAnnotation(name)`` when the installed JAX has it,
+    else a ``nullcontext`` — host-side trace spans (``repro.obs``) enter this
+    so they appear in captured JAX profiles without requiring one."""
+    import contextlib
+    try:
+        return jax.profiler.TraceAnnotation(name)
+    except (AttributeError, TypeError):  # pragma: no cover - ancient JAX
+        return contextlib.nullcontext()
+
+
+def named_scope(name: str):
+    """``jax.named_scope(name)`` (names ops in HLO/profiles inside traced
+    code) with a ``nullcontext`` fallback on releases that lack it."""
+    import contextlib
+    try:
+        return jax.named_scope(name)
+    except (AttributeError, TypeError):  # pragma: no cover - ancient JAX
+        return contextlib.nullcontext()
+
+
 @functools.lru_cache(maxsize=1)
 def _jit_params() -> frozenset[str]:
     try:

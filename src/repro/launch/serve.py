@@ -32,7 +32,18 @@ def main(argv=None):
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--run-dir", default="",
+                    help="directory for the JSONL run log (repro.obs "
+                         "RunSink) — per-request prefill/decode latency "
+                         "events land there")
     args = ap.parse_args(argv)
+
+    from repro import obs
+
+    sink = (obs.RunSink.create(args.run_dir,
+                               meta={"arch": args.arch, "mode": "serve",
+                                     "batch": args.batch})
+            if args.run_dir else obs.NullSink())
 
     cfg = get_config(args.arch).reduced()
     model = build_model(cfg)
@@ -56,16 +67,24 @@ def main(argv=None):
     tok = jnp.argmax(logits[:, -1, :], axis=-1)[:, None].astype(jnp.int32)
     out = [tok]
     kv_len = jnp.full((args.batch,), args.prompt_len, jnp.int32)
+    decode_hist = obs.Histogram("decode_latency_s")
     t0 = time.perf_counter()
     for i in range(args.max_new - 1):
+        t_tok = time.perf_counter()
         logits, cache = decode(params, tok, cache, jnp.int32(args.prompt_len + i),
                                kv_len + i + 1)
         tok = jnp.argmax(logits[:, -1, :], axis=-1)[:, None].astype(jnp.int32)
+        jax.block_until_ready(tok)
+        decode_hist.observe(time.perf_counter() - t_tok)
         out.append(tok)
-    jax.block_until_ready(tok)
     t_decode = time.perf_counter() - t0
 
     gen = np.asarray(jnp.concatenate(out, axis=1))
+    sink.emit("request", prefill_seconds=t_prefill, decode_seconds=t_decode,
+              prompt_tokens=args.batch * args.prompt_len,
+              generated_tokens=args.batch * args.max_new,
+              decode_latency=decode_hist.snapshot())
+    sink.close()
     print(f"arch={cfg.name} batch={args.batch}")
     print(f"prefill: {t_prefill*1000:.1f} ms ({args.batch*args.prompt_len/t_prefill:,.0f} tok/s)")
     print(f"decode : {t_decode*1000:.1f} ms "

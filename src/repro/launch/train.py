@@ -24,18 +24,23 @@ Examples:
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import sys
 import time
+import warnings
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.analysis import plan_check
 from repro.analysis.invariants import cp_seq_divisible
 from repro.configs.registry import ARCH_IDS, ModelConfig, get_config
 from repro.core import calibrate
 from repro.core import profile_cache as pcache_lib
+from repro.core.cluster import TPU_V5E_POD
+from repro.core.profiler_model import profile_model
 from repro.core.search import SearchEngine
 from repro.launch import mesh as mesh_lib
 from repro.core.strategy import ExecutionPlan, LayerStrategy
@@ -43,7 +48,8 @@ from repro.models import build_model
 from repro.runtime import checkpoint as ckpt_lib
 from repro.runtime import resize as resize_lib
 from repro.runtime.data import SyntheticDataset
-from repro.runtime.elastic import ElasticEvent, replan, replan_and_diff
+from repro.runtime.elastic import (DriftReplanAdvisor, ElasticEvent, replan,
+                                   replan_and_diff)
 from repro.runtime.train import construct_hybrid_parallel_model
 from repro.runtime.train_pp import PipelineTrainer
 
@@ -99,27 +105,110 @@ def _build_runtime(model, plan: ExecutionPlan):
     return resize_lib.make_trainer(model, plan, mesh), mesh
 
 
+def _predicted_breakdown(plan: ExecutionPlan, cfg: ModelConfig, seq_len: int,
+                         global_batch: int, calibration) -> dict:
+    """Cost-model comm-vs-compute split for ``plan`` (seconds per step) —
+    recorded in the plan event so the run report can compare the predicted
+    split against the measured step times."""
+    from repro.core import cost_model as cm
+
+    profile = profile_model(cfg, seq_len)
+    micro = max(global_batch // max(plan.grad_accum, 1), 1)
+    cluster = dataclasses.replace(TPU_V5E_POD, chips=max(plan.num_devices, 1))
+    env = cm.CostEnv(cluster=cluster,
+                     devices=plan.num_devices // max(plan.pp, 1),
+                     pp=plan.pp, micro_batch=micro,
+                     grad_accum=plan.grad_accum,
+                     pp_schedule=plan.pp_schedule,
+                     pp_interleave=plan.pp_interleave,
+                     calibration=calibration)
+    if len(plan.layer_strategies) == len(profile.layers):
+        strategies = list(plan.layer_strategies)
+    else:
+        strategies = [plan.default_strategy] * len(profile.layers)
+    M = env.microbatches()
+    compute = comm = 0.0
+    for lp, s in zip(profile.layers, strategies):
+        compute += M * cm.compute_time(lp, s, env)
+        comm += M * (cm.tp_comm_time(lp, s, env)
+                     + cm.cp_comm_time(lp, s, env)
+                     + cm.ep_comm_time(lp, s, env))
+        comm += cm.dp_comm_time(lp, s, env)
+    return {"compute_s": compute, "comm_s": comm,
+            "predicted_step_time_s": plan.predicted_step_time}
+
+
+def _emit_plan(sink, reason: str, plan: ExecutionPlan, *,
+               breakdown: dict | None = None,
+               spec: "resize_lib.MigrationSpec | None" = None,
+               rejections: dict | None = None) -> None:
+    """The single "here is the active plan" emitter — one structured ``plan``
+    event plus one human line, shared by the initial-search, live-resize and
+    legacy-replan paths (previously three near-identical print blocks)."""
+    sched = f" pp={plan.pp}/{plan.pp_schedule}" + (
+        f"x{plan.pp_interleave}" if plan.pp_interleave > 1 else "") \
+        if plan.pp > 1 else ""
+    note = plan.notes.split("|")[-1].strip() if plan.notes else ""
+    line = (f"plan[{reason}]: {plan.default_strategy.short()} "
+            f"ga={plan.grad_accum}{sched} mesh={plan.mesh_shape} "
+            f"groups={len(plan.groups())}")
+    if note:
+        line += f" ({note})"
+    print(line)
+    if spec is not None:
+        print(f"   migration spec: {spec.summary()}")
+    fields = dict(
+        reason=reason, strategy=plan.default_strategy.short(),
+        mesh_shape=list(plan.mesh_shape), mesh_axes=list(plan.mesh_axes),
+        grad_accum=plan.grad_accum, pp=plan.pp, pp_schedule=plan.pp_schedule,
+        predicted_step_time_s=plan.predicted_step_time, notes=note)
+    if breakdown:
+        fields["predicted_breakdown"] = breakdown
+    if spec is not None:
+        fields["migration"] = spec.summary()
+    sink.emit("plan", **fields)
+    if rejections:
+        sink.emit("search_rejections",
+                  counts={k: int(v) for k, v in rejections.items()})
+
+
+def _aot_memory(step_fn, params, opt, batch):
+    """(compiled step callable, peak HBM bytes) via the AOT memory_analysis
+    the calibration path already uses — compiled once, then the compiled
+    object IS the step function (no double compile).  Falls back to the
+    plain jitted fn when the backend offers no analysis."""
+    try:
+        compiled = step_fn.lower(params, opt, batch).compile()
+        ma = compiled.memory_analysis()
+        peak = float(ma.temp_size_in_bytes + ma.argument_size_in_bytes)
+        return compiled, peak
+    except Exception:
+        return step_fn, 0.0
+
+
 def _apply_resize(cfg, args, event: ElasticEvent, model, hp, plan, params, opt,
-                  carry: "resize_lib.CarryState"):
+                  carry: "resize_lib.CarryState", sink):
     """Replan for the survivors and migrate live state onto the new mesh.
     Returns the rebuilt (hp, plan, mesh, params, opt, carry, step_fn); the
     returned carry is the authoritative resume point for the loop."""
     new_plan, spec = replan_and_diff(cfg, event, args.seq, args.batch, plan,
                                      arch=cfg.name,
                                      profile_cache=args.profile_cache or None)
-    print(f"   new plan: {new_plan.default_strategy.short()} "
-          f"ga={new_plan.grad_accum} mesh={new_plan.mesh_shape} "
-          f"({new_plan.notes.split('|')[-1].strip()})")
-    print(f"   migration spec: {spec.summary()}")
+    _emit_plan(sink, "resize", new_plan, spec=spec)
     new_hp, new_mesh = _build_runtime(model, new_plan)
-    if args.elastic_mode == "checkpoint":
-        params, opt, carry, report = resize_lib.migrate_via_checkpoint(
-            hp, new_hp, params, opt, carry, step=carry.step,
-            async_write=args.ckpt_async == "on")
-    else:
-        params, opt, carry, report = resize_lib.migrate(
-            hp, new_hp, params, opt, carry)
+    with obs.span("resize_migrate"):
+        if args.elastic_mode == "checkpoint":
+            params, opt, carry, report = resize_lib.migrate_via_checkpoint(
+                hp, new_hp, params, opt, carry, step=carry.step,
+                async_write=args.ckpt_async == "on")
+        else:
+            params, opt, carry, report = resize_lib.migrate(
+                hp, new_hp, params, opt, carry)
     print(f"   {report.summary()}")
+    sink.emit("resize", step=carry.step, old_devices=event.old_devices,
+              new_devices=event.new_devices, reason=event.reason,
+              path=report.path, seconds=report.seconds,
+              bytes_moved=report.bytes_moved, migration=spec.summary())
     return (new_hp, new_plan, new_mesh, params, opt, carry,
             new_hp.jit_train_step(donate=False))
 
@@ -183,6 +272,11 @@ def main(argv=None):
                          "(params/opt sums + final loss) — lets two runs be "
                          "compared for bitwise-equivalent training state")
     ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--run-dir", default="",
+                    help="directory for the JSONL run log (repro.obs "
+                         "RunSink; e.g. results/runs/<run_id>) — step "
+                         "metrics, plan/resize/ckpt/drift events; render a "
+                         "report with scripts/render_run.py")
     ap.add_argument("--profile-cache", default="",
                     help="path to a measured profile cache (see the `profile` "
                          "subcommand); calibrates the search's cost model — "
@@ -207,6 +301,12 @@ def main(argv=None):
     n_dev = jax.device_count()
     events = _parse_events(args, n_dev)
 
+    sink = (obs.RunSink.create(args.run_dir,
+                               meta={"arch": cfg.name, "seq": args.seq,
+                                     "batch": args.batch, "steps": args.steps,
+                                     "devices": n_dev})
+            if args.run_dir else obs.NullSink())
+
     # ---- plan: search the engine even at CPU scale (paper workflow) ------
     if args.cp > 1:
         if not cp_seq_divisible(args.seq, args.cp):
@@ -227,6 +327,7 @@ def main(argv=None):
                              layer_strategies=[strat] * cfg.num_layers,
                              default_strategy=strat)
         mesh = None
+        rejections = None
     else:
         # staged/ring run: pod axis carries the pipeline, cp axis the
         # ring-attention sequence shards; schedule/cp searched or pinned
@@ -256,20 +357,15 @@ def main(argv=None):
                 f"(pp*interleave) == 0, cp needs seq % (2*cp) == 0)")
         plan = res.plan
         mesh = mesh_lib.make_mesh(shape, axes)
-    sched = f" pp={plan.pp}/{plan.pp_schedule}" + (
-        f"x{plan.pp_interleave}" if plan.pp_interleave > 1 else "") \
-        if plan.pp > 1 else ""
-    print(f"plan: {plan.default_strategy.short()} ga={plan.grad_accum}{sched} "
-          f"groups={len(plan.groups())}")
+        rejections = res.rejections
+    _emit_plan(sink, "search", plan,
+               breakdown=_predicted_breakdown(plan, cfg, args.seq, args.batch,
+                                              calibration),
+               rejections=rejections)
 
     if args.validate_only:
         # static verification only: nothing below this point runs — no param
         # init, no lowering, no compile
-        import dataclasses
-
-        from repro.core.cluster import TPU_V5E_POD
-        from repro.core.profiler_model import profile_model
-
         report = plan_check.check_plan(
             plan, dataclasses.replace(TPU_V5E_POD, chips=plan.num_devices),
             cfg, seq_len=args.seq, global_batch=args.batch,
@@ -319,12 +415,13 @@ def main(argv=None):
     step_fn = hp.jit_train_step(donate=False)
     writer = None
     if args.ckpt_dir and args.ckpt_async == "on":
-        writer = ckpt_lib.CheckpointWriter()
+        writer = ckpt_lib.CheckpointWriter(sink=sink)
 
     last_saved_step = -1
+    sync_ckpt_seconds = 0.0
 
     def save_checkpoint(at_step: int) -> None:
-        nonlocal last_saved_step
+        nonlocal last_saved_step, sync_ckpt_seconds
         if at_step == last_saved_step:    # final save == last periodic save
             return
         last_saved_step = at_step
@@ -333,8 +430,27 @@ def main(argv=None):
             writer.save_async(args.ckpt_dir, at_step, canon_p, canon_o, plan)
             print(f"checkpoint queued (async) step {at_step}")
         else:
+            t0 = time.perf_counter()
             path = ckpt_lib.save(args.ckpt_dir, at_step, canon_p, canon_o, plan)
+            dt = time.perf_counter() - t0
+            sync_ckpt_seconds += dt
+            sink.emit("ckpt", phase="written", step=at_step,
+                      stall_seconds=dt, queue_depth=0, path=str(path))
             print(f"checkpoint -> {path}")
+
+    # ---- telemetry: step timing / MFU / drift ---------------------------
+    devices = plan.num_devices if mesh is not None else 1
+    tokens_per_step = args.batch * args.seq
+    flops_per_step = (profile_model(cfg, args.seq).model_flops_per_token()
+                      * tokens_per_step)
+    registry = obs.MetricsRegistry()
+    timer = obs.StepTimer(registry, tokens_per_step=tokens_per_step,
+                          flops_per_step=flops_per_step,
+                          peak_flops=TPU_V5E_POD.peak_flops * devices)
+    drift = obs.DriftMonitor(plan.predicted_step_time)
+    advisor = DriftReplanAdvisor(sink)
+    drift_was_sustained = False
+    compiled_fn = None                   # AOT-compiled step (set lazily)
 
     t_start = time.perf_counter()
     tokens_done = 0
@@ -357,36 +473,70 @@ def main(argv=None):
                                               samples_seen=step * args.batch,
                                               rng=host_rng)
                 hp, plan, mesh, params, opt, carry, step_fn = _apply_resize(
-                    cfg, args, event, model, hp, plan, params, opt, carry)
+                    cfg, args, event, model, hp, plan, params, opt, carry,
+                    sink)
                 step, host_rng = carry.step, carry.rng   # resume exactly where
                 cur_devices = new_dev                    # the old trainer stopped
+                compiled_fn = None                       # new plan recompiles
+                drift.reset(plan.predicted_step_time)    # new prediction too
+                timer.peak_flops = TPU_V5E_POD.peak_flops * plan.num_devices
             else:
                 # legacy behavior: replan for 75% capacity and report only
                 print("!! simulated node failure: re-searching plan for 75% capacity")
                 event = ElasticEvent(old_devices=256, new_devices=192)
                 new_plan = replan(get_config(args.arch) if not args.preset else cfg,
                                   event, args.seq, args.batch)
-                print(f"   new plan: {new_plan.default_strategy.short()} "
-                      f"ga={new_plan.grad_accum} ({new_plan.notes.split('|')[-1].strip()})")
+                _emit_plan(sink, "replan-advisory", new_plan)
         batch = {k: jnp.asarray(v) for k, v in ds.batch(step).items()}
-        params, opt, metrics = step_fn(params, opt, batch)
+        if compiled_fn is None:
+            compiled_fn, peak_hbm = _aot_memory(step_fn, params, opt, batch)
+            if peak_hbm:
+                registry.gauge("peak_hbm_bytes").set(peak_hbm)
+                sink.emit("memory", step=step, peak_hbm_bytes=peak_hbm)
+        timer.start()
+        params, opt, metrics = compiled_fn(params, opt, batch)
+        rec = timer.stop(step, (params, opt, metrics))
         last_metrics = metrics       # host sync deferred to log/digest time
         tokens_done += args.batch * args.seq
+        verdict = drift.observe(step, rec.step_time_s)
+        if verdict is not None and (verdict.drifting or drift_was_sustained):
+            sink.emit("drift", **verdict.as_dict())
+            if verdict.sustained and not drift_was_sustained:
+                warnings.warn(
+                    f"GALV070 cost-model-drift: measured step-time EMA "
+                    f"{verdict.measured_ema * 1e3:.1f} ms is "
+                    f"{verdict.ratio:.2f}x the plan's predicted "
+                    f"{verdict.predicted * 1e3:.1f} ms — re-profile and "
+                    f"re-search recommended", stacklevel=2)
+            advisor.observe(verdict)
+            drift_was_sustained = verdict.sustained
         if step % args.log_every == 0 or step == args.steps - 1:
+            host = jax.device_get(metrics)    # ONE device sync for the dict
+            step_rec = {**rec.as_dict(), "loss": float(host["loss"]),
+                        "grad_norm": float(host["grad_norm"])}
+            sink.emit("step", **step_rec)
             dt = time.perf_counter() - t_start
-            print(f"step {step:5d}  loss {float(metrics['loss']):.4f}  "
-                  f"gnorm {float(metrics['grad_norm']):.2f}  "
-                  f"tok/s {tokens_done/dt:,.0f}")
+            print(obs.format_live_line(step_rec)
+                  + f"  avg tok/s {tokens_done / dt:,.0f}")
         if args.ckpt_dir and (step + 1) % args.ckpt_every == 0:
             save_checkpoint(step + 1)
         step += 1
     if args.ckpt_dir:
         save_checkpoint(args.steps)
+    ckpt_stall = sync_ckpt_seconds
     if writer is not None:
         path = writer.close()             # drain pending async saves
+        ckpt_stall += writer.blocked_seconds
         print(f"checkpoint -> {path} "
               f"(async writer: {writer.saves_completed} saves, "
               f"{writer.blocked_seconds * 1e3:.1f} ms total step-loop stall)")
+    sink.emit("run_end", steps=timer.steps.value, tokens=tokens_done,
+              wall_seconds=time.perf_counter() - t_start,
+              ckpt_stall_seconds=ckpt_stall,
+              drift_sustained=drift_was_sustained,
+              metrics=registry.snapshot(),
+              spans=obs.default_tracer().timeline())
+    sink.close()
     if args.digest:
         canon_p, canon_o = resize_lib.canonical_state(hp, params, opt)
         p_sum = sum(float(np.abs(np.asarray(jax.device_get(x), np.float64)).sum())

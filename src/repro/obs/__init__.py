@@ -1,0 +1,26 @@
+"""repro.obs — runtime telemetry: metrics, trace spans, run sink, drift.
+
+Stdlib-only at import time (jax is reached lazily, only to fence timers
+and enter profiler annotations), so the lint lane and the offline report
+renderer (``scripts/render_run.py``) can import it without an accelerator
+stack on the path.
+"""
+from repro.obs.drift import (DEFAULT_SUSTAIN_STEPS, DEFAULT_WARMUP_STEPS,
+                             DRIFT_RATIO_THRESHOLD, DriftMonitor,
+                             DriftVerdict)
+from repro.obs.metrics import (Counter, Gauge, Histogram, MetricsRegistry,
+                               StepRecord, StepTimer, fence)
+from repro.obs.sink import (SCHEMA_VERSION, CorruptRunLogError, NullSink,
+                            RunSink, StaleRunLogError, format_live_line,
+                            read_run)
+from repro.obs.trace import SpanRecord, Tracer, default_tracer, span
+
+__all__ = [
+    "Counter", "Gauge", "Histogram", "MetricsRegistry", "StepRecord",
+    "StepTimer", "fence",
+    "SpanRecord", "Tracer", "default_tracer", "span",
+    "SCHEMA_VERSION", "RunSink", "NullSink", "read_run",
+    "format_live_line", "CorruptRunLogError", "StaleRunLogError",
+    "DriftMonitor", "DriftVerdict", "DRIFT_RATIO_THRESHOLD",
+    "DEFAULT_SUSTAIN_STEPS", "DEFAULT_WARMUP_STEPS",
+]

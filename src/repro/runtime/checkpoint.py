@@ -487,15 +487,21 @@ class CheckpointWriter:
     Note: the caller must not donate/delete the snapshotted buffers before
     the write lands (the training drivers run their step with
     ``donate=False`` for exactly this reason).
+
+    ``sink`` (a ``repro.obs`` RunSink-shaped object) receives one ``ckpt``
+    event per save — phase ``queued`` with the step-loop stall this save
+    cost and the queue depth, phase ``written`` from the writer thread when
+    the artifact lands.
     """
 
-    def __init__(self, max_pending: int = 1):
+    def __init__(self, max_pending: int = 1, *, sink=None):
         self._queue: queue.Queue = queue.Queue(maxsize=max(max_pending, 1))
         self._thread: Optional[threading.Thread] = None
         self._lock = threading.Lock()
         self._error: Optional[BaseException] = None
         self._last_path: Optional[pathlib.Path] = None
         self._stop = object()              # sentinel
+        self._sink = sink
         self.blocked_seconds = 0.0         # cumulative step-loop stall time
         self.saves_started = 0
         self.saves_completed = 0
@@ -514,11 +520,16 @@ class CheckpointWriter:
                 if job is self._stop:
                     return
                 directory, step, trees, kw = job
+                t0 = time.perf_counter()
                 path = _write_step(directory, step,
                                    _host_arrays(*trees), **kw)
                 with self._lock:
                     self._last_path = path
                     self.saves_completed += 1
+                if self._sink is not None:
+                    self._sink.emit("ckpt", phase="written", step=step,
+                                    write_seconds=time.perf_counter() - t0,
+                                    path=str(path))
             except BaseException as e:  # noqa: BLE001 — surfaced on wait()
                 with self._lock:
                     if self._error is None:
@@ -550,16 +561,30 @@ class CheckpointWriter:
         """Queue a save.  Returns as soon as the snapshot is initiated and a
         writer slot is free — i.e. blocks only on the previous save."""
         self._raise_pending()
+        from repro.obs import span
+
         t0 = time.perf_counter()
-        begin_host_snapshot(params, opt_state)
-        job = (pathlib.Path(directory), step,
-               (_pin_host_leaves(params), _pin_host_leaves(opt_state)),
-               dict(plan=plan, keep=keep, extra_meta=extra_meta,
-                    codec=codec, version=version))
+        with span("ckpt_host_copy"):
+            begin_host_snapshot(params, opt_state)
+            job = (pathlib.Path(directory), step,
+                   (_pin_host_leaves(params), _pin_host_leaves(opt_state)),
+                   dict(plan=plan, keep=keep, extra_meta=extra_meta,
+                        codec=codec, version=version))
         self._ensure_thread()
-        self._queue.put(job)               # blocks iff previous still pending
+        with span("ckpt_enqueue"):
+            self._queue.put(job)           # blocks iff previous still pending
         self.saves_started += 1
-        self.blocked_seconds += time.perf_counter() - t0
+        stalled = time.perf_counter() - t0
+        self.blocked_seconds += stalled
+        if self._sink is not None:
+            self._sink.emit("ckpt", phase="queued", step=step,
+                            stall_seconds=stalled,
+                            queue_depth=self.queue_depth)
+
+    @property
+    def queue_depth(self) -> int:
+        """Saves currently queued behind the writer thread."""
+        return self._queue.qsize()
 
     def wait(self) -> Optional[pathlib.Path]:
         """Drain every queued save; raise the first writer error if any.

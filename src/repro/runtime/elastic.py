@@ -31,6 +31,50 @@ class ElasticEvent:
     reason: str = "node-failure"
 
 
+class DriftReplanAdvisor:
+    """Turns sustained cost-model drift into a logged replan-worthy signal.
+
+    The ``repro.obs`` drift monitor flags each step whose measured-EMA /
+    predicted ratio leaves the threshold band; this advisor watches those
+    verdicts and, when the drift is *sustained*, emits one structured
+    ``replan_signal`` event (code GALV070) to the run sink.  It is advisory
+    only — no automatic replan is triggered; the operator (or a later PR's
+    policy layer) decides whether to re-profile/re-search.  ``cooldown_s``
+    rate-limits re-notification while the drift persists; the clock is
+    injectable so tests pin the cadence deterministically.
+    """
+
+    def __init__(self, sink, *, cooldown_s: float = 300.0, clock=None):
+        import time as _time
+
+        self._sink = sink
+        self.cooldown_s = cooldown_s
+        self._clock = clock if clock is not None else _time.time
+        self._last_signal: Optional[float] = None
+        self.signals_emitted = 0
+
+    def observe(self, verdict) -> bool:
+        """Feed one :class:`repro.obs.DriftVerdict`; returns True when a
+        ``replan_signal`` event was emitted for it."""
+        if verdict is None or not verdict.sustained:
+            if verdict is not None and not verdict.drifting:
+                self._last_signal = None   # drift cleared: re-arm immediately
+            return False
+        now = self._clock()
+        if (self._last_signal is not None
+                and now - self._last_signal < self.cooldown_s):
+            return False
+        self._last_signal = now
+        self.signals_emitted += 1
+        self._sink.emit(
+            "replan_signal", code="GALV070", step=verdict.step,
+            measured_ema=verdict.measured_ema, predicted=verdict.predicted,
+            ratio=verdict.ratio,
+            action="advisory: re-profile and re-search recommended "
+                   "(no auto-replan)")
+        return True
+
+
 def surviving_mesh(devices: int, *, model_axis: int = 16,
                    pp: int = 1, cp: int = 1,
                    global_batch: Optional[int] = None) -> tuple[tuple, tuple]:

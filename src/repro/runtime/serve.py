@@ -30,6 +30,7 @@ class ServingEngine:
     batch: int = 0                 # request batch (for divisibility checks)
     max_len: int = 0               # cache capacity
     unroll: bool = False           # dry-run: unroll layer loops for exact FLOPs
+    metrics: Any = None            # optional repro.obs.MetricsRegistry
 
     def __post_init__(self):
         self.param_specs = shd.param_spec_tree(self.model, self.plan, self.mesh, kind="param")
@@ -109,16 +110,40 @@ class ServingEngine:
 
     # ------------------------------------------------------------ simple loop
     def greedy_generate(self, params, prompt_tokens, max_new: int, max_len: int):
-        """Reference generation loop (tests / quickstart; not perf-critical)."""
+        """Reference generation loop (tests / quickstart; not perf-critical).
+
+        With ``metrics`` set (a ``repro.obs.MetricsRegistry``), records the
+        request's prefill latency and per-token decode latency into the
+        ``prefill_latency_s`` / ``decode_latency_s`` histograms — the SLO
+        signals ROADMAP item 1's scheduler will batch against."""
+        import time as _time
+
+        from repro.obs import fence, span
+
         B, S = prompt_tokens.shape
         self.max_len = max_len
         self.__post_init__()
-        logits, cache = self.prefill_step(params, prompt_tokens)
+        t0 = _time.perf_counter()
+        with span("prefill"):
+            logits, cache = self.prefill_step(params, prompt_tokens)
+            fence(logits)
+        if self.metrics is not None:
+            self.metrics.histogram("prefill_latency_s").observe(
+                _time.perf_counter() - t0)
         out = [jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)]
         kv_len = jnp.full((B,), S, jnp.int32)
         for i in range(max_new - 1):
             tok = out[-1][:, None]
-            logits, cache = self.decode_step(params, tok, cache, jnp.int32(S + i),
-                                             kv_len=kv_len + i + 1)
+            t0 = _time.perf_counter()
+            with span("decode"):
+                logits, cache = self.decode_step(
+                    params, tok, cache, jnp.int32(S + i), kv_len=kv_len + i + 1)
+                fence(logits)
+            if self.metrics is not None:
+                self.metrics.histogram("decode_latency_s").observe(
+                    _time.perf_counter() - t0)
             out.append(jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32))
+        if self.metrics is not None:
+            self.metrics.counter("requests").inc()
+            self.metrics.counter("generated_tokens").inc(B * max_new)
         return jnp.stack(out, axis=1)

@@ -202,43 +202,47 @@ class HybridParallelModel:
         default_rules = shd.act_rules(plan, plan.default_strategy, self.mesh)
         with axis_rules(default_rules):
             k = max(plan.grad_accum, 1)
-            if k == 1:
-                (loss, metrics), grads = jax.value_and_grad(
-                    self.loss_fn, has_aux=True)(params, batch)
-            else:
-                micro = jax.tree.map(
-                    lambda x: x.reshape((k, x.shape[0] // k) + x.shape[1:]), batch)
-                g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            # named_scope labels the fwd+bwd vs optimizer phases in HLO and
+            # captured profiles (the in-jit counterpart of obs host spans)
+            with compat.named_scope("fwd_bwd"):
+                if k == 1:
+                    (loss, metrics), grads = jax.value_and_grad(
+                        self.loss_fn, has_aux=True)(params, batch)
+                else:
+                    micro = jax.tree.map(
+                        lambda x: x.reshape((k, x.shape[0] // k) + x.shape[1:]), batch)
+                    g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
 
-                def acc(carry, mb):
-                    g_sum, l_sum = carry
-                    (l, mets), g = jax.value_and_grad(self.loss_fn, has_aux=True)(params, mb)
-                    g_sum = jax.tree.map(
-                        lambda a, b: a + b.astype(jnp.float32), g_sum, g)
-                    if self.mesh is not None:
-                        g_sum = self._constrain(g_sum, self.grad_specs)
-                    return (g_sum, l_sum + l), mets
+                    def acc(carry, mb):
+                        g_sum, l_sum = carry
+                        (l, mets), g = jax.value_and_grad(self.loss_fn, has_aux=True)(params, mb)
+                        g_sum = jax.tree.map(
+                            lambda a, b: a + b.astype(jnp.float32), g_sum, g)
+                        if self.mesh is not None:
+                            g_sum = self._constrain(g_sum, self.grad_specs)
+                        return (g_sum, l_sum + l), mets
 
-                (grads, loss_sum), mets_seq = jax.lax.scan(
-                    acc, (g0, jnp.float32(0.0)), micro)
-                grads = jax.tree.map(lambda g: g / k, grads)
-                loss = loss_sum / k
-                metrics = jax.tree.map(lambda m: m[-1], mets_seq)
+                    (grads, loss_sum), mets_seq = jax.lax.scan(
+                        acc, (g0, jnp.float32(0.0)), micro)
+                    grads = jax.tree.map(lambda g: g / k, grads)
+                    loss = loss_sum / k
+                    metrics = jax.tree.map(lambda m: m[-1], mets_seq)
 
-            grads = self._constrain(grads, self.grad_specs)
-            opt_state = opt_lib.AdamWState(
-                step=opt_state.step,
-                m=self._constrain(opt_state.m, self.opt_specs),
-                v=self._constrain(opt_state.v, self.opt_specs),
-            )
-            new_params, new_opt, stats = opt_lib.adamw_update(
-                params, grads, opt_state, self.opt_cfg)
-            new_params = self._constrain(new_params, self.param_specs)
-            new_opt = opt_lib.AdamWState(
-                step=new_opt.step,
-                m=self._constrain(new_opt.m, self.opt_specs),
-                v=self._constrain(new_opt.v, self.opt_specs),
-            )
+            with compat.named_scope("optimizer"):
+                grads = self._constrain(grads, self.grad_specs)
+                opt_state = opt_lib.AdamWState(
+                    step=opt_state.step,
+                    m=self._constrain(opt_state.m, self.opt_specs),
+                    v=self._constrain(opt_state.v, self.opt_specs),
+                )
+                new_params, new_opt, stats = opt_lib.adamw_update(
+                    params, grads, opt_state, self.opt_cfg)
+                new_params = self._constrain(new_params, self.param_specs)
+                new_opt = opt_lib.AdamWState(
+                    step=new_opt.step,
+                    m=self._constrain(new_opt.m, self.opt_specs),
+                    v=self._constrain(new_opt.v, self.opt_specs),
+                )
             metrics = dict(metrics)
             metrics["loss"] = loss
             metrics.update(stats)

@@ -271,11 +271,13 @@ class PipelineTrainer:
     # ------------------------------------------------------------ step
     def train_step(self, params, opt_state, batch):
         with axis_rules(self._rules):
-            loss, metrics, grads = self._loss_and_grads(params, batch)
-            grads = self._constrain(grads, self.grad_specs)
-            new_params, new_opt, stats = opt_lib.adamw_update(
-                params, grads, opt_state, self.opt_cfg)
-            new_params = self._constrain(new_params, self.param_specs)
+            with compat.named_scope("fwd_bwd"):
+                loss, metrics, grads = self._loss_and_grads(params, batch)
+            with compat.named_scope("optimizer"):
+                grads = self._constrain(grads, self.grad_specs)
+                new_params, new_opt, stats = opt_lib.adamw_update(
+                    params, grads, opt_state, self.opt_cfg)
+                new_params = self._constrain(new_params, self.param_specs)
             metrics = dict(metrics)
             metrics["loss"] = loss
             metrics.update(stats)

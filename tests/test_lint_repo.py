@@ -128,6 +128,24 @@ def test_lint_repo_is_stdlib_only():
     assert proc.stdout.strip() == "1"
 
 
+# ------------------------------------------------------------------ obs-print
+
+def test_bare_print_flagged_in_runtime_layer_only():
+    bad = "print('step', step)\n"
+    assert _codes(bad, rel="src/repro/runtime/train.py") == ["obs-print"]
+    assert _codes(bad, rel="src/repro/runtime/serve.py") == ["obs-print"]
+    # the launch drivers own the human-facing console line; everything else
+    # outside src/repro/runtime/ is out of scope too
+    assert _codes(bad, rel="src/repro/launch/train.py") == []
+    assert _codes(bad, rel="src/repro/obs/sink.py") == []
+    assert _codes(bad, rel="tests/test_x.py") == []
+    # sink emission and attribute calls are the sanctioned paths
+    assert _codes("sink.emit('step', loss=loss)\n",
+                  rel="src/repro/runtime/train.py") == []
+    assert _codes("logging.info('x')\n",
+                  rel="src/repro/runtime/train.py") == []
+
+
 # -------------------------------------------------------- calibration-constant
 
 def test_fresh_cost_model_constant_flagged():

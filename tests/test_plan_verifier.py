@@ -110,6 +110,13 @@ PAIRS = [
                          cfg=get_config("nemotron-4-15b"))}),
      (_mk(T16, (16, 16), ("data", "model")),
       {"saved_plan": _mk(T16, (8, 8), ("data", "model"))})),  # mesh may differ
+    ("GALV070",
+     (dataclasses.replace(_mk(T1, (16, 16), ("data", "model")),
+                          predicted_step_time=0.1),
+      {"measured_step_time": 0.25}),                     # 2.5x the prediction
+     (dataclasses.replace(_mk(T1, (16, 16), ("data", "model")),
+                          predicted_step_time=0.1),
+      {"measured_step_time": 0.15})),
     ("GALV060",
      (_mk(T1, (16, 16), ("data", "model")),
       {"calibration": cal_mod.Calibration(
@@ -149,6 +156,24 @@ def test_format_table_renders_codes_and_status():
     assert "GALV013" in table and "hint:" in table and "FAIL" in table
     assert "OK (0 diagnostics)" in _check(
         _mk(T1, (16, 16), ("data", "model"))).format_table()
+
+
+def test_cost_model_drift_is_a_two_sided_warning():
+    """GALV070 fires in either direction (a cost model that *overestimates*
+    by 2x is as stale as one that underestimates) and is advisory — a
+    drifting plan still verifies ok() so a live run is never invalidated."""
+    plan = dataclasses.replace(_mk(T1, (16, 16), ("data", "model")),
+                               predicted_step_time=0.1)
+    slow = _check(plan, measured_step_time=0.5)
+    fast = _check(plan, measured_step_time=0.01)
+    assert "GALV070" in slow.codes() and "GALV070" in fast.codes()
+    assert slow.ok() and fast.ok()                       # warning, not error
+    d = next(d for d in slow.diagnostics if d.code == "GALV070")
+    assert d.severity == "warning" and d.slug == "cost-model-drift"
+    # no prediction (or no measurement) -> nothing to compare, no diagnostic
+    zero = dataclasses.replace(plan, predicted_step_time=0.0)
+    assert "GALV070" not in _check(zero, measured_step_time=0.5).codes()
+    assert "GALV070" not in _check(plan).codes()
 
 
 def test_mesh_malformed_short_circuits():
