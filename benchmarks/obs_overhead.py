@@ -20,6 +20,10 @@ the best of ``PASSES`` paired rounds is taken.
 ``check()`` (auto-discovered by ``benchmarks/run.py --check``) asserts the
 instrumented median is within **3%** of the bare median and that the run
 sink produced a parseable log with one ``step`` event per instrumented step.
+It also drives a tiny serving workload through ``repro.serving.build`` and
+asserts the per-request telemetry contract: one ``request_start`` /
+``first_token`` / ``request_end`` event per request in the run log, plus
+populated ``ttft_s`` / ``tpot_s`` histograms in the metrics registry.
 
 Usage:
   PYTHONPATH=src python benchmarks/obs_overhead.py           # table
@@ -149,9 +153,48 @@ def run() -> dict:
             "step_events_logged": step_events}
 
 
+def _serve_events() -> dict:
+    """Drive a few requests through the serving facade with a run sink and
+    metrics attached; return the per-request event/histogram counts."""
+    import numpy as np
+
+    from repro import obs, serving
+
+    n_requests, max_new = 3, 4
+    config = serving.ServeConfig(
+        arch="qwen2.5-3b", reduced=True,
+        cache=serving.CacheConfig(max_context=32, page_size=8),
+        scheduler=serving.SchedulerConfig(num_slots=2, prefill_chunk=8))
+    metrics = obs.MetricsRegistry()
+    with tempfile.TemporaryDirectory(prefix="obs-serve-") as td:
+        sink = obs.RunSink.create(pathlib.Path(td) / "serve",
+                                  meta={"mode": "serve-bench"})
+        engine = serving.build(config, metrics=metrics, sink=sink)
+        rng = np.random.default_rng(0)
+        vocab = config.model_config().vocab_size
+        for _ in range(n_requests):
+            engine.submit(serving.Request(
+                prompt=rng.integers(0, vocab, 6, dtype=np.int32),
+                max_new=max_new))
+        engine.run_until_drained()
+        sink.close()
+        records = obs.read_run(pathlib.Path(td) / "serve" / "run.jsonl")
+    counts = {}
+    for r in records:
+        counts[r.get("event")] = counts.get(r.get("event"), 0) + 1
+    snap = metrics.snapshot()
+    return {"requests": n_requests,
+            "request_start": counts.get("request_start", 0),
+            "first_token": counts.get("first_token", 0),
+            "request_end": counts.get("request_end", 0),
+            "ttft_observations": snap["ttft_s"]["count"],
+            "tpot_observations": snap["tpot_s"]["count"]}
+
+
 def check(verbose: bool = True) -> dict:
     """CI smoke: telemetry must cost < 3% of the bare step loop and the run
-    sink must have logged every instrumented step."""
+    sink must have logged every instrumented step; the serving facade must
+    emit the full per-request event set."""
     r = run()
     assert r["step_events_logged"] == STEPS, (
         f"run sink logged {r['step_events_logged']} step events, "
@@ -161,12 +204,20 @@ def check(verbose: bool = True) -> dict:
         f"{100 * MAX_OVERHEAD:.0f}% budget (bare "
         f"{r['bare_median_s'] * 1e3:.2f} ms vs instrumented "
         f"{r['instrumented_median_s'] * 1e3:.2f} ms per step)")
+    s = _serve_events()
+    for ev in ("request_start", "first_token", "request_end",
+               "ttft_observations", "tpot_observations"):
+        assert s[ev] == s["requests"], (
+            f"serving facade logged {s[ev]} {ev} for {s['requests']} "
+            f"requests: {s}")
+    r["serve_events"] = s
     if verbose:
         print(f"OK: bare {r['bare_median_s'] * 1e3:.2f} ms vs instrumented "
               f"{r['instrumented_median_s'] * 1e3:.2f} ms per step "
               f"({100 * r['overhead_frac']:+.2f}% overhead, budget "
               f"{100 * MAX_OVERHEAD:.0f}%); {r['step_events_logged']} step "
-              f"events logged")
+              f"events logged; serving telemetry complete for "
+              f"{s['requests']} requests")
     return r
 
 

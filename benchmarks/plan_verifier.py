@@ -70,6 +70,7 @@ def _sweep_plans(cfg) -> list:
 def _bad_corpus(cfg):
     """[(label, plan, check_plan kwargs, expected_code), ...] — one entry per
     diagnostic class the structural checker covers without monkeypatching."""
+    from repro.analysis import plan_check as pc
     from repro.configs.registry import get_config
     from repro.core.strategy import LayerStrategy, uniform_plan
 
@@ -118,6 +119,16 @@ def _bad_corpus(cfg):
          dataclasses.replace(mk(t1, (16, 16), ("data", "model")),
                              predicted_step_time=0.1),
          {"measured_step_time": 0.25}, "GALV070"),   # 2.5x the prediction
+        ("serve-page-indivisible", mk(t1, (16, 16), ("data", "model")),
+         {"serve": pc.ServeSpec(num_slots=8, page_size=48, max_context=4096,
+                                tp=16)}, "GALV080"),
+        ("serve-pool-hbm-overcommit", mk(t1, (16, 16), ("data", "model")),
+         {"serve": pc.ServeSpec(num_slots=8, page_size=64, max_context=4096,
+                                tp=1)}, "GALV081"),  # bf16 14B > 16 GB HBM
+        ("serve-slots-pages-insufficient",
+         mk(t1, (16, 16), ("data", "model")),
+         {"serve": pc.ServeSpec(num_slots=8, page_size=64, max_context=4096,
+                                num_pages=4, tp=16)}, "GALV082"),
     ]
     # GALV030: mixed ring degrees across layers
     mixed = dataclasses.replace(

@@ -7,7 +7,9 @@
 Stdlib-only (imports repro.obs.sink, which needs no jax/numpy), so reports
 render anywhere the log file can be copied — no accelerator stack required.
 Sections: run header, step-time percentiles + tokens/sec + MFU, the plan's
-predicted comm-vs-compute split, checkpoint stalls, resize events, and the
+predicted comm-vs-compute split, checkpoint stalls, resize events, serving
+request percentiles (TTFT/TPOT + queue depth from the continuous-batching
+scheduler's request_start/first_token/request_end events), and the
 cost-model drift verdict (GALV070 signals included).
 """
 from __future__ import annotations
@@ -129,6 +131,36 @@ def render(records: list[dict]) -> str:
                      f"{_ms(r.get('seconds', 0.0))}, "
                      f"{r.get('bytes_moved', 0) / 1e6:.1f} MB)")
     if by.get("resize"):
+        lines.append("")
+
+    # ---- serving requests ---------------------------------------------
+    ends = by.get("request_end", [])
+    starts = by.get("request_start", [])
+    if starts or ends:
+        lines.append(f"serving: {len(starts)} request(s) submitted, "
+                     f"{len(ends)} completed, "
+                     f"{len(by.get('request_evicted', []))} evicted")
+        ttfts = [r["ttft_s"] for r in ends if "ttft_s" in r]
+        tpots = [r["tpot_s"] for r in ends if "tpot_s" in r]
+        if ttfts:
+            lines.append(
+                f"  ttft        p50 {_ms(_pct(ttfts, 50))}   "
+                f"p90 {_ms(_pct(ttfts, 90))}   p99 {_ms(_pct(ttfts, 99))}")
+        if tpots:
+            lines.append(
+                f"  tpot        p50 {_ms(_pct(tpots, 50))}   "
+                f"p90 {_ms(_pct(tpots, 90))}   p99 {_ms(_pct(tpots, 99))}")
+        gen = sum(r.get("generated_tokens", 0) for r in ends)
+        total = [r.get("total_s", 0.0) for r in ends]
+        if gen and total:
+            lines.append(f"  tokens      {gen:,} generated; request total "
+                         f"p50 {_ms(_pct(total, 50))}   "
+                         f"p99 {_ms(_pct(total, 99))}")
+        depths = [r["queue_depth"] for r in starts + ends
+                  if "queue_depth" in r]
+        if depths:
+            lines.append(f"  queue depth mean {sum(depths) / len(depths):.1f}"
+                         f"   max {max(depths)}")
         lines.append("")
 
     # ---- drift verdict -------------------------------------------------

@@ -27,6 +27,10 @@ Rules:
 * **obs-print** — no bare ``print(`` in ``src/repro/runtime/``: runtime
   telemetry routes through ``repro.obs`` (sink events / ``format_live_line``)
   so it stays machine-readable; stray prints vanish from run logs.
+* **serve-config** — no direct ``ServingEngine(`` construction outside
+  ``repro/serving`` (and the class's own module): the supported serving
+  surface is the validated ``ServeConfig`` + ``repro.serving.build`` facade;
+  step-level access goes through ``repro.serving.step_engine``.
 """
 from __future__ import annotations
 
@@ -72,11 +76,15 @@ def _rules_for(rel: pathlib.PurePosixPath) -> frozenset[str]:
         if str(rel) == "tests/_prop.py":
             return frozenset()
         return frozenset({"hypothesis-shim"})
-    rules = frozenset(COMPAT_RULES) | {"hypothesis-shim", "paramdef-scale"}
+    rules = frozenset(COMPAT_RULES) | {"hypothesis-shim", "paramdef-scale",
+                                       "serve-config"}
     if str(rel) in CALIBRATION_SCOPED_FILES:
         rules = rules | {"calibration-constant"}
     if parts[:3] == ("src", "repro", "runtime"):
         rules = rules | {"obs-print"}
+    if (parts[:3] == ("src", "repro", "serving")
+            or str(rel) == "src/repro/runtime/serve.py"):
+        rules = rules - {"serve-config"}
     return rules
 
 
@@ -196,6 +204,11 @@ class _Visitor(ast.NodeVisitor):
                        "releases — use repro.compat.cost_analysis(obj)")
         if name == "ParamDef":
             self._check_paramdef(node)
+        if name == "ServingEngine":
+            self._flag(node, "serve-config",
+                       "direct ServingEngine(...) construction — the "
+                       "supported entry points are repro.serving.build "
+                       "(ServeConfig facade) and repro.serving.step_engine")
         if isinstance(fn, ast.Name) and fn.id == "print":
             self._flag(node, "obs-print",
                        "bare print() in the runtime layer — emit through "

@@ -35,6 +35,11 @@ code  slug                      invariant
                                 profile cache
 070   cost-model-drift          measured step time within a ratio band of
                                 the plan's predicted step time (warning)
+080   serve-page-indivisible    page_size divides the serving max_context
+081   serve-pool-hbm-overcommit kv page pool + tp-sharded weights <= HBM
+082   serve-slots-pages-insufficient
+                                every decode slot can hold >= 1 page
+                                beyond the reserved null page
 ====  ========================  ========================================
 
 New invariants MUST land with a code here plus a failing/passing test pair
@@ -106,6 +111,15 @@ CATALOG: dict[str, tuple[str, str, str]] = {
                 "measured step time diverges from the plan's prediction "
                 "beyond the drift threshold — re-run the `profile` "
                 "subcommand to recalibrate, then re-search the plan"),
+    "GALV080": ("serve-page-indivisible", ERROR,
+                "pick page_size dividing max_context — a partial tail page "
+                "would silently truncate the advertised context window"),
+    "GALV081": ("serve-pool-hbm-overcommit", ERROR,
+                "shrink num_pages/num_slots, raise tp, or lower max_context "
+                "— the kv page pool plus the tp-sharded weights exceed HBM"),
+    "GALV082": ("serve-slots-pages-insufficient", ERROR,
+                "grow num_pages: each decode slot needs at least one real "
+                "page (page 0 is the reserved null page)"),
 }
 
 
@@ -179,6 +193,77 @@ class PlanReport:
 
 
 # ---------------------------------------------------------------------------
+# serving invariants (GALV08x)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ServeSpec:
+    """Paged-cache geometry to verify alongside (or without) a plan.
+
+    ``num_pages=None`` means full provisioning (``1 + num_slots * ceil(
+    max_context / page_size)``, the :meth:`PagedCacheConfig.for_model`
+    default) — GALV082 can then only fire through GALV081.  ``tp`` is the
+    degree the serving weights are sharded over; ``bytes_per_elem`` is the
+    kv/weight element width (bf16 by default).
+    """
+
+    num_slots: int
+    page_size: int
+    max_context: int
+    num_pages: Optional[int] = None
+    tp: int = 1
+    bytes_per_elem: float = 2.0
+
+    def resolved_num_pages(self) -> int:
+        if self.num_pages is not None:
+            return self.num_pages
+        import math
+        return 1 + self.num_slots * math.ceil(
+            max(self.max_context, 1) / max(self.page_size, 1))
+
+
+def check_serve(spec: ServeSpec, cluster: ClusterSpec,
+                cfg: ModelConfig) -> PlanReport:
+    """Statically verify a paged-cache serving geometry: page size divides
+    the context window (GALV080), pool + tp-sharded weights fit HBM
+    (GALV081), and the pool holds at least one real page per decode slot
+    (GALV082).  Runs with zero compilation — ``ServeConfig.__post_init__``
+    and ``SearchEngine.search_serve`` both gate on this report."""
+    out = PlanReport()
+    diag = out.diagnostics.append
+    pages = spec.resolved_num_pages()
+
+    if spec.page_size < 1 or spec.max_context % spec.page_size != 0:
+        diag(Diagnostic("GALV080", f"page_size {spec.page_size} does not "
+                        f"divide max_context {spec.max_context}",
+                        where="cache"))
+
+    if pages - 1 < spec.num_slots:
+        diag(Diagnostic("GALV082", f"{pages} pages (incl. the null page) "
+                        f"cannot give {spec.num_slots} slots one page each",
+                        where="cache"))
+
+    from repro.core.profiler_model import profile_model
+    tp = max(spec.tp, 1)
+    weight_bytes = (spec.bytes_per_elem
+                    * profile_model(cfg, spec.max_context).total_params()
+                    / tp)
+    # the pool shards over tp like the padded serving cache (sequence dim
+    # over the model axis — flash-decode style), so both terms are per-device
+    pool_bytes = (2.0 * spec.bytes_per_elem * cfg.num_layers * pages
+                  * spec.page_size * cfg.num_kv_heads
+                  * cfg.resolved_head_dim) / tp
+    need = weight_bytes + pool_bytes
+    if need > cluster.hbm_bytes:
+        diag(Diagnostic(
+            "GALV081",
+            f"kv pool/tp {pool_bytes / 1e9:.2f} GB + weights/tp "
+            f"{weight_bytes / 1e9:.2f} GB = {need / 1e9:.2f} GB exceeds "
+            f"{cluster.hbm_bytes / 1e9:.2f} GB HBM", where="cache"))
+    return out
+
+
+# ---------------------------------------------------------------------------
 # cheap per-candidate gate (used inside SearchEngine._evaluate hot loop)
 # ---------------------------------------------------------------------------
 
@@ -226,6 +311,7 @@ def check_plan(
     mesh_constrained: bool = True,
     calibration=None,                  # calibrate.Calibration enables GALV060
     measured_step_time: Optional[float] = None,  # seconds; enables GALV070
+    serve: Optional[ServeSpec] = None,           # enables GALV080-082
 ) -> PlanReport:
     """Statically verify ``plan`` against ``cluster`` and ``cfg``.
 
@@ -239,7 +325,8 @@ def check_plan(
     the stale-profile-cache check (GALV060);  ``measured_step_time`` (an
     observed per-step wall time in seconds, e.g. the ``repro.obs`` drift
     monitor's EMA) enables the cost-model-drift check (GALV070) against
-    ``plan.predicted_step_time``.
+    ``plan.predicted_step_time``;  ``serve`` (a :class:`ServeSpec`) enables
+    the paged-cache serving checks (GALV080-082).
     ``mesh_constrained=False`` (the search's free mode, which explores
     degrees on a notional flat mesh) skips the axis-width realizability
     checks GALV003/GALV005/GALV032 — the divisibility, capacity, schedule
@@ -407,6 +494,10 @@ def check_plan(
     # -- checkpoint/plan compatibility (GALV050) ---------------------------
     if saved_plan is not None:
         out.diagnostics.extend(check_checkpoint_compat(saved_plan, plan))
+
+    # -- serving cache geometry (GALV080-082) ------------------------------
+    if serve is not None:
+        out.diagnostics.extend(check_serve(serve, cluster, cfg).diagnostics)
 
     return out
 

@@ -285,3 +285,77 @@ def head_time(model_profile: ModelProfile, strat: LayerStrategy, env: CostEnv) -
     shards = max(strat.tp, 1) * max(strat.cp, 1)
     per_micro = (model_profile.head_flops * env.local(strat) / shards / eff) * 3.0
     return env.grad_accum * per_micro
+
+
+# --------------------------------------------------------------------------
+# serving decode roofline (continuous batching — tokens, not steps)
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class DecodeCost:
+    """One batched decode step: one new token for every in-flight stream.
+
+    Decode at serving batch sizes is **memory-bandwidth-bound**: every step
+    must stream the full tp-shard of the weights plus each stream's KV
+    history from HBM, while the matching FLOPs are only ~2 per weight
+    element.  Compute and memory traffic overlap (the MXU consumes as the
+    HBM streams), so the step charges ``max(mem, compute)``; TP collectives
+    are exposed latency on top.
+    """
+
+    mem_s: float                    # (weights/tp + kv history) / hbm_bw
+    compute_s: float                # 2·N·batch / tp / attainable FLOPs
+    comm_s: float                   # tp all-reduces, 2 per layer
+
+    @property
+    def bound(self) -> str:
+        return "memory" if self.mem_s >= self.compute_s else "compute"
+
+    @property
+    def step_s(self) -> float:
+        return max(self.mem_s, self.compute_s) + self.comm_s
+
+
+def decode_step_time(profile: ModelProfile, cluster: ClusterSpec, *,
+                     kv_len: int, tp: int = 1, batch: int = 1,
+                     bytes_per_elem: float = 2.0, dtype: str = "bf16",
+                     calibration: cal.Calibration = cal.DEFAULT_CALIBRATION,
+                     ) -> DecodeCost:
+    """Roofline for one continuous-batching decode tick with ``batch``
+    streams each holding ``kv_len`` cached tokens.  Weights and the KV pool
+    both shard over ``tp`` (the serving cache shards its sequence dim over
+    the model axis), so tp divides the memory traffic but adds two
+    activation all-reduces per layer."""
+    cfg = profile.cfg
+    cl = calibration.effective_cluster(cluster)
+    tp = max(tp, 1)
+    weight_bytes = bytes_per_elem * profile.total_params() / tp
+    kv_bytes_per_tok = (2.0 * bytes_per_elem * cfg.num_layers
+                        * cfg.num_kv_heads * cfg.resolved_head_dim)
+    mem_s = (weight_bytes + batch * kv_len * kv_bytes_per_tok / tp) / cl.hbm_bw
+    compute_s = (2.0 * profile.total_params() * batch / tp
+                 / calibration.eff_flops(cluster, dtype))
+    comm_s = 0.0
+    if tp > 1:
+        nbytes = batch * profile.d_model * bytes_per_elem
+        comm_s = 2.0 * cfg.num_layers * hw.allreduce_time(nbytes, tp, cl)
+    return DecodeCost(mem_s, compute_s, comm_s)
+
+
+def prefill_time(profile: ModelProfile, cluster: ClusterSpec, *,
+                 prompt_len: int, tp: int = 1, bytes_per_elem: float = 2.0,
+                 dtype: str = "bf16",
+                 calibration: cal.Calibration = cal.DEFAULT_CALIBRATION,
+                 ) -> float:
+    """Compute-bound prompt pass for one request (the TTFT floor before any
+    queueing): 2·N forward FLOPs per prompt token over the tp shard, plus
+    the same two all-reduces per layer at prompt width."""
+    cfg = profile.cfg
+    tp = max(tp, 1)
+    t = (2.0 * profile.total_params() * prompt_len / tp
+         / calibration.eff_flops(cluster, dtype))
+    if tp > 1:
+        cl = calibration.effective_cluster(cluster)
+        nbytes = prompt_len * profile.d_model * bytes_per_elem
+        t += 2.0 * cfg.num_layers * hw.allreduce_time(nbytes, tp, cl)
+    return t

@@ -343,6 +343,15 @@ class SearchEngine:
             return None
         return plan
 
+    # ------------------------------------------------------------ serving
+    def search_serve(self, *, max_context: int,
+                     prompt_len: Optional[int] = None, slo=None,
+                     **kw) -> "ServeSearchResult":
+        """The serve objective: pick (tp, num_slots, page_size) for
+        continuous-batching decode under an SLO — see :func:`search_serve`."""
+        return search_serve(self, max_context=max_context,
+                            prompt_len=prompt_len, slo=slo, **kw)
+
 
 def getattr_supports(cfg: ModelConfig) -> bool:
     """PP runtime supports stacked-block families (see runtime/train_pp)."""
@@ -476,3 +485,130 @@ def serving_plan(cfg: ModelConfig, *, seq_len: int, batch: int,
         param_bytes / devices + cache / devices,
         notes=f"serving heuristic: zero={zero} (params {param_bytes/1e9:.1f} GB)",
     )
+
+
+# --------------------------------------------------------------------------
+# serve objective — searched continuous-batching deployment
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ServePlanChoice:
+    """One searched serving deployment: tp degree + paged-cache geometry,
+    with the roofline's latency/throughput predictions attached."""
+
+    tp: int
+    num_slots: int
+    page_size: int
+    num_pages: int                    # incl. the reserved null page
+    ttft_s: float                     # queue-free prefill latency, prompt_len
+    tpot_s: float                     # steady-state per-token latency
+    tokens_per_s: float               # aggregate decode throughput, full slots
+    tokens_per_s_per_chip: float      # the objective: throughput / tp
+    bound: str                        # "memory" | "compute" at steady state
+    pool_gb: float                    # kv page pool, device bytes / 1e9
+
+
+@dataclasses.dataclass
+class ServeSearchResult:
+    choice: Optional[ServePlanChoice]
+    evaluated: int                    # (tp, slots, page) combos costed
+    search_seconds: float
+    feasible: bool
+    #: GALV code (or "slo-ttft"/"slo-tpot"/"slo-rate") -> rejected candidates
+    rejections: dict = dataclasses.field(default_factory=dict)
+    candidates: list = dataclasses.field(default_factory=list)  # all feasible
+
+
+def search_serve(
+    engine: "SearchEngine",
+    *,
+    max_context: int,
+    prompt_len: Optional[int] = None,
+    slo=None,                         # ttft_s / tpot_s / request_rate attrs
+    tp_options: Optional[list] = None,
+    num_slots_options: tuple = (1, 2, 4, 8, 16, 32, 64, 128, 256),
+    page_size_options: tuple = (8, 16, 32, 64, 128),
+    bytes_per_elem: float = 2.0,
+) -> ServeSearchResult:
+    """Pick (tp, num_slots, page_size) for continuous-batching serving.
+
+    Every candidate geometry is gated through the static serving verifier
+    (``plan_check.check_serve`` — GALV080/081/082) before it is costed;
+    rejected candidates are tallied by code, exactly like the training
+    search.  Survivors are costed with the decode roofline
+    (``cost_model.decode_step_time`` at the steady-state kv length of
+    ``max_context/2``) and the prefill estimate, filtered against the SLO
+    (``slo.ttft_s`` / ``slo.tpot_s`` p50 targets, ``slo.request_rate``
+    offered load), and ranked by **decode tokens/sec per chip** — the
+    serving analogue of the training search's step-time objective.
+    """
+    t0 = time.perf_counter()
+    cfg = engine.cfg
+    cluster = engine.cluster
+    prompt_len = prompt_len if prompt_len is not None else max_context // 2
+    profile = profile_model(cfg, min(max_context, 4096))
+    if tp_options is None:
+        tp_options = [t for t in (1, 2, 4, 8, 16, 32)
+                      if t <= cluster.intra_size
+                      and cfg.num_heads % t == 0]
+    gen_len = max(max_context - prompt_len, 1)
+
+    rejections: dict = {}
+    feasible: list[ServePlanChoice] = []
+    evaluated = 0
+
+    def reject(key: str) -> None:
+        rejections[key] = rejections.get(key, 0) + 1
+
+    for tp in tp_options:
+        for slots in num_slots_options:
+            for page in page_size_options:
+                spec = pc.ServeSpec(num_slots=slots, page_size=page,
+                                    max_context=max_context, tp=tp,
+                                    bytes_per_elem=bytes_per_elem)
+                report = pc.check_serve(spec, cluster, cfg)
+                if not report.ok():
+                    for code in report.error_codes():
+                        reject(code)
+                    continue
+                evaluated += 1
+                dc = cm.decode_step_time(
+                    profile, cluster, kv_len=max_context // 2, tp=tp,
+                    batch=slots, bytes_per_elem=bytes_per_elem,
+                    calibration=engine.calibration)
+                ttft = cm.prefill_time(
+                    profile, cluster, prompt_len=prompt_len, tp=tp,
+                    bytes_per_elem=bytes_per_elem,
+                    calibration=engine.calibration)
+                tokens_per_s = slots / dc.step_s
+                if slo is not None:
+                    if (getattr(slo, "ttft_s", None)
+                            and ttft > slo.ttft_s):
+                        reject("slo-ttft")
+                        continue
+                    if (getattr(slo, "tpot_s", None)
+                            and dc.step_s > slo.tpot_s):
+                        reject("slo-tpot")
+                        continue
+                    rate = getattr(slo, "request_rate", None)
+                    if rate and tokens_per_s < rate * gen_len:
+                        reject("slo-rate")
+                        continue
+                num_pages = spec.resolved_num_pages()
+                pool = (2.0 * bytes_per_elem * cfg.num_layers * num_pages
+                        * page * cfg.num_kv_heads
+                        * cfg.resolved_head_dim) / tp
+                feasible.append(ServePlanChoice(
+                    tp=tp, num_slots=slots, page_size=page,
+                    num_pages=num_pages, ttft_s=ttft, tpot_s=dc.step_s,
+                    tokens_per_s=tokens_per_s,
+                    tokens_per_s_per_chip=tokens_per_s / tp,
+                    bound=dc.bound, pool_gb=pool / 1e9))
+
+    feasible.sort(key=lambda c: (-c.tokens_per_s_per_chip, c.tpot_s,
+                                 c.tp, c.page_size))
+    return ServeSearchResult(
+        choice=feasible[0] if feasible else None,
+        evaluated=evaluated, search_seconds=time.perf_counter() - t0,
+        feasible=bool(feasible), rejections=rejections,
+        candidates=feasible)

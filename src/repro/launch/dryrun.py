@@ -39,7 +39,7 @@ from repro.launch.hlo_stats import collective_stats
 from repro.launch.mesh import make_mesh, make_production_mesh
 from repro.models import build_model
 from repro.runtime.data import input_specs
-from repro.runtime.serve import ServingEngine
+from repro.serving import step_engine
 from repro.runtime.train import construct_hybrid_parallel_model
 
 RESULTS_DIR = pathlib.Path(__file__).resolve().parents[3] / "results" / "dryrun"
@@ -255,8 +255,8 @@ def run_cell(arch: str, shape_id: str, *, multi_pod: bool = False,
                 input_specs(cfg, spec, model))
         lowered = hp.jit_train_step(donate=True).lower(*args)
     else:
-        engine = ServingEngine(model, plan, mesh,
-                               batch=spec.global_batch, max_len=spec.seq_len)
+        engine = step_engine(model, plan, mesh,
+                             batch=spec.global_batch, max_len=spec.seq_len)
         params_abs = engine.abstract_params()      # bf16 at inference
         specs = input_specs(cfg, spec, model)
         if spec.kind == "prefill":
@@ -303,8 +303,9 @@ def run_cell(arch: str, shape_id: str, *, multi_pod: bool = False,
                           input_specs(cfg, spec, model))
                 lowered_u = hp_u.jit_train_step(donate=True).lower(*args_u)
             else:
-                engine_u = ServingEngine(model, plan, mesh, batch=spec.global_batch,
-                                         max_len=spec.seq_len, unroll=True)
+                engine_u = step_engine(model, plan, mesh,
+                                       batch=spec.global_batch,
+                                       max_len=spec.seq_len, unroll=True)
                 specs = input_specs(cfg, spec, model)
                 params_abs = engine_u.abstract_params()
                 if spec.kind == "prefill":

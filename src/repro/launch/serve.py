@@ -1,22 +1,59 @@
-"""Batched serving driver: prefill + decode loop with request batching.
+"""Serving driver: continuous batching over the paged KV cache.
 
-CPU-scale demo of the serving runtime (the decode_32k / long_500k cells
-exercise the full-scale path via the dry-run).
+CPU-scale demo of the serving stack (the decode_32k / long_500k dry-run
+cells exercise the full-scale sharded path).  The CLI builds a frozen,
+statically-validated :class:`repro.serving.ServeConfig`, stands the engine
+up with ``repro.serving.build``, submits a batch of requests and drains the
+scheduler — per-request ``request_start`` / ``first_token`` / ``request_end``
+events land in the JSONL run sink (``scripts/render_run.py`` renders the
+TTFT/TPOT percentiles).
+
+``serve.py search ...`` runs the serve objective instead: the search picks
+(tp, num_slots, page_size) for a cluster + context window under an SLO and
+prints the roofline's predictions without touching any device memory.
 """
 from __future__ import annotations
 
 import argparse
 import time
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro import compat
-from repro.configs.registry import ARCH_IDS, get_config
-from repro.core.strategy import ExecutionPlan, LayerStrategy
-from repro.models import build_model
-from repro.runtime.serve import ServingEngine
+from repro.configs.registry import ARCH_IDS
+
+
+def _search_main(argv):
+    from repro import serving
+    from repro.configs.registry import get_config
+    from repro.core.search import SearchEngine
+
+    ap = argparse.ArgumentParser(prog="serve.py search")
+    ap.add_argument("--arch", choices=ARCH_IDS, default="qwen3-14b")
+    ap.add_argument("--max-context", type=int, default=4096)
+    ap.add_argument("--prompt-len", type=int, default=1024)
+    ap.add_argument("--ttft", type=float, default=None, help="SLO p50 TTFT, s")
+    ap.add_argument("--tpot", type=float, default=None, help="SLO p50 TPOT, s")
+    ap.add_argument("--rate", type=float, default=None,
+                    help="offered load, requests/s")
+    args = ap.parse_args(argv)
+
+    slo = serving.SLOConfig(ttft_s=args.ttft, tpot_s=args.tpot,
+                            request_rate=args.rate)
+    result = SearchEngine(get_config(args.arch)).search_serve(
+        max_context=args.max_context, prompt_len=args.prompt_len, slo=slo)
+    print(f"evaluated {result.evaluated} geometries in "
+          f"{result.search_seconds * 1e3:.0f} ms; rejections: "
+          f"{result.rejections}")
+    if result.choice is None:
+        print("no feasible serving deployment under this SLO")
+        return 1
+    c = result.choice
+    print(f"tp={c.tp} num_slots={c.num_slots} page_size={c.page_size} "
+          f"num_pages={c.num_pages} ({c.pool_gb:.2f} GB pool/chip)")
+    print(f"predicted: ttft {c.ttft_s * 1e3:.1f} ms, tpot "
+          f"{c.tpot_s * 1e3:.2f} ms, {c.tokens_per_s:,.0f} tok/s "
+          f"({c.tokens_per_s_per_chip:,.0f}/chip), {c.bound}-bound")
+    return 0
 
 
 def main(argv=None):
@@ -27,69 +64,74 @@ def main(argv=None):
         # `serve.py profile ...` — same measured-profiling entry as train.py
         from repro.launch import profile as profile_cli
         return profile_cli.main(argv[1:])
+    if argv and argv[0] == "search":
+        return _search_main(argv[1:])
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=ARCH_IDS, default="qwen2.5-3b")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=4,
+                    help="requests to submit")
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--num-slots", type=int, default=0,
+                    help="concurrent decode slots (0: same as --batch)")
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--max-context", type=int, default=0,
+                    help="per-request cache ceiling (0: prompt+new, padded "
+                         "to a whole page)")
+    ap.add_argument("--prefill-chunk", type=int, default=32)
+    ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--run-dir", default="",
                     help="directory for the JSONL run log (repro.obs "
-                         "RunSink) — per-request prefill/decode latency "
-                         "events land there")
+                         "RunSink) — per-request TTFT/TPOT events land there")
     args = ap.parse_args(argv)
 
-    from repro import obs
+    from repro import obs, serving
 
     sink = (obs.RunSink.create(args.run_dir,
                                meta={"arch": args.arch, "mode": "serve",
                                      "batch": args.batch})
             if args.run_dir else obs.NullSink())
+    metrics = obs.MetricsRegistry()
 
-    cfg = get_config(args.arch).reduced()
-    model = build_model(cfg)
-    params = model.init(jax.random.PRNGKey(0))
-    max_len = args.prompt_len + args.max_new
-    strat = LayerStrategy()
-    plan = ExecutionPlan(arch=cfg.name, shape="serve", mesh_axes=("data",),
-                         mesh_shape=(1,), layer_strategies=[strat] * cfg.num_layers,
-                         default_strategy=strat)
-    eng = ServingEngine(model, plan, batch=args.batch, max_len=max_len)
-    params = eng.cast_params(params)
+    need = args.prompt_len + args.max_new
+    max_context = args.max_context or -(-need // args.page_size) * args.page_size
+    config = serving.ServeConfig(
+        arch=args.arch, reduced=True,
+        cache=serving.CacheConfig(max_context=max_context,
+                                  page_size=args.page_size),
+        scheduler=serving.SchedulerConfig(
+            num_slots=args.num_slots or args.batch,
+            prefill_chunk=args.prefill_chunk,
+            temperature=args.temperature))
+    engine = serving.build(config, metrics=metrics, sink=sink)
+    vocab = config.model_config().vocab_size
 
-    prompts = jax.random.randint(jax.random.PRNGKey(1),
-                                 (args.batch, args.prompt_len), 0, cfg.vocab_size)
+    rng = np.random.default_rng(1)
+    prompts = rng.integers(0, vocab, (args.batch, args.prompt_len),
+                           dtype=np.int32)
     t0 = time.perf_counter()
-    logits, cache = compat.jit(eng.prefill_step)(params, prompts)
-    jax.block_until_ready(logits)
-    t_prefill = time.perf_counter() - t0
-
-    decode = compat.jit(eng.decode_step)
-    tok = jnp.argmax(logits[:, -1, :], axis=-1)[:, None].astype(jnp.int32)
-    out = [tok]
-    kv_len = jnp.full((args.batch,), args.prompt_len, jnp.int32)
-    decode_hist = obs.Histogram("decode_latency_s")
-    t0 = time.perf_counter()
-    for i in range(args.max_new - 1):
-        t_tok = time.perf_counter()
-        logits, cache = decode(params, tok, cache, jnp.int32(args.prompt_len + i),
-                               kv_len + i + 1)
-        tok = jnp.argmax(logits[:, -1, :], axis=-1)[:, None].astype(jnp.int32)
-        jax.block_until_ready(tok)
-        decode_hist.observe(time.perf_counter() - t_tok)
-        out.append(tok)
-    t_decode = time.perf_counter() - t0
-
-    gen = np.asarray(jnp.concatenate(out, axis=1))
-    sink.emit("request", prefill_seconds=t_prefill, decode_seconds=t_decode,
-              prompt_tokens=args.batch * args.prompt_len,
-              generated_tokens=args.batch * args.max_new,
-              decode_latency=decode_hist.snapshot())
+    streams = [engine.submit(serving.Request(prompt=prompts[b],
+                                             max_new=args.max_new))
+               for b in range(args.batch)]
+    engine.run_until_drained()
+    wall = time.perf_counter() - t0
     sink.close()
-    print(f"arch={cfg.name} batch={args.batch}")
-    print(f"prefill: {t_prefill*1000:.1f} ms ({args.batch*args.prompt_len/t_prefill:,.0f} tok/s)")
-    print(f"decode : {t_decode*1000:.1f} ms "
-          f"({args.batch*(args.max_new-1)/t_decode:,.0f} tok/s)")
-    print(f"sample tokens: {gen[0][:10].tolist()}")
+
+    reqs = [s.request for s in streams]
+    tokens = sum(len(r.tokens) for r in reqs)
+    ttft = sorted(r.ttft_s for r in reqs)
+    tpot = sorted(r.tpot_s for r in reqs)
+    print(f"arch={config.model_config().name} requests={args.batch} "
+          f"slots={config.scheduler.num_slots} page={args.page_size} "
+          f"max_context={max_context}")
+    print(f"generated {tokens} tokens in {wall * 1e3:.1f} ms "
+          f"({tokens / wall:,.0f} tok/s)")
+    print(f"ttft: p50 {ttft[len(ttft) // 2] * 1e3:.1f} ms  "
+          f"max {ttft[-1] * 1e3:.1f} ms")
+    print(f"tpot: p50 {tpot[len(tpot) // 2] * 1e3:.2f} ms  "
+          f"max {tpot[-1] * 1e3:.2f} ms")
+    print(f"stats: {engine.stats()}")
+    print(f"sample tokens: {reqs[0].tokens[:10]}")
 
 
 if __name__ == "__main__":

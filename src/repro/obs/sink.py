@@ -19,7 +19,9 @@ Every event gets ``ts`` (wall-clock seconds, injectable clock) and
 ``event`` (its type).  Event types are open-ended; the ones the repo emits
 today: ``run_start``, ``step``, ``plan``, ``ckpt``, ``resize``,
 ``search_rejections``, ``drift``, ``replan_signal``, ``request``,
-``run_end``.
+``run_end``, and the serving scheduler's per-request set —
+``request_start``, ``first_token``, ``request_end``, ``request_evicted``
+(rendered as TTFT/TPOT percentiles by ``scripts/render_run.py``).
 """
 from __future__ import annotations
 

@@ -109,13 +109,54 @@ class ServingEngine:
         )
 
     # ------------------------------------------------------------ simple loop
-    def greedy_generate(self, params, prompt_tokens, max_new: int, max_len: int):
-        """Reference generation loop (tests / quickstart; not perf-critical).
+    def greedy_generate(self, params, prompt_tokens, max_new: int,
+                        max_len: int, *, paged: Optional[bool] = None):
+        """Greedy generation for one static batch of equal-length prompts.
+
+        ``paged=None`` auto-routes: unsharded dense models go through the
+        paged KV cache (``repro.runtime.kv_cache``) as the trivial
+        B-requests-at-once case of the continuous-batching scheduler — no
+        ``batch × max_len`` padded cache is ever allocated.  Mesh-sharded or
+        non-dense models (and ``paged=False``) take
+        :meth:`greedy_generate_reference`, the slow, obviously-correct
+        synchronous loop that stays the oracle for the scheduler's
+        token-for-token equivalence tests (same twin discipline as
+        checkpointing)."""
+        if paged is None:
+            cfg = getattr(self.model, "cfg", None)
+            paged = (self.mesh is None and cfg is not None
+                     and cfg.family == "dense")
+        if not paged:
+            return self.greedy_generate_reference(params, prompt_tokens,
+                                                  max_new, max_len)
+        import numpy as np
+
+        from repro.runtime.kv_cache import PagedCacheConfig
+        from repro.runtime.scheduler import (ContinuousBatchingScheduler,
+                                             Request)
+
+        B, S = prompt_tokens.shape
+        cache_cfg = PagedCacheConfig.for_model(
+            self.model.cfg, num_slots=B,
+            page_size=min(16, max(S, 1)), max_context=max_len)
+        sched = ContinuousBatchingScheduler(self.model, params, cache_cfg,
+                                            metrics=self.metrics)
+        prompts = np.asarray(prompt_tokens, np.int32)
+        reqs = [sched.submit(Request(prompt=prompts[b], max_new=max_new)).request
+                for b in range(B)]
+        sched.run_until_drained()
+        return jnp.asarray(np.stack([r.tokens for r in reqs]), jnp.int32)
+
+    def greedy_generate_reference(self, params, prompt_tokens, max_new: int,
+                                  max_len: int):
+        """Reference generation loop (tests / oracle; not perf-critical):
+        one padded ``batch × max_len`` cache, one synchronous decode step per
+        token.  The paged path must match this token-for-token.
 
         With ``metrics`` set (a ``repro.obs.MetricsRegistry``), records the
         request's prefill latency and per-token decode latency into the
         ``prefill_latency_s`` / ``decode_latency_s`` histograms — the SLO
-        signals ROADMAP item 1's scheduler will batch against."""
+        signals the continuous-batching scheduler batches against."""
         import time as _time
 
         from repro.obs import fence, span

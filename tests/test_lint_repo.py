@@ -66,6 +66,26 @@ def test_hypothesis_only_via_prop_shim():
                       rel="tests/test_thing.py")
 
 
+# -------------------------------------------------------------- serve-config
+
+def test_direct_serving_engine_construction_flagged():
+    bad = "from repro.runtime.serve import ServingEngine\n" \
+          "eng = ServingEngine(model, plan, mesh)\n"
+    assert "serve-config" in _codes(bad)
+    ok = "from repro import serving\n" \
+         "eng = serving.step_engine(model, plan, mesh)\n"
+    assert not _codes(ok)
+
+
+def test_serving_package_and_runtime_serve_exempt_from_serve_config():
+    src = "eng = ServingEngine(model, plan, mesh)\n"
+    assert not _codes(src, rel="src/repro/serving/__init__.py")
+    assert not _codes(src, rel="src/repro/runtime/serve.py")
+    assert not _codes(src, rel="tests/test_thing.py")
+    # but other runtime modules are NOT exempt
+    assert "serve-config" in _codes(src, rel="src/repro/runtime/other.py")
+
+
 # ------------------------------------------------------------ paramdef-scale
 
 def test_paramdef_3d_needs_explicit_scale():

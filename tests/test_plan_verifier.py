@@ -126,6 +126,27 @@ PAIRS = [
       {"calibration": cal_mod.Calibration(
           source="measured",
           provenance={"cache_schema": pcache_mod.SCHEMA_VERSION})})),
+    ("GALV080",                        # 4096 % 48 != 0: partial tail page
+     (_mk(T1, (16, 16), ("data", "model")),
+      {"serve": pc.ServeSpec(num_slots=8, page_size=48, max_context=4096,
+                             tp=16)}),
+     (_mk(T1, (16, 16), ("data", "model")),
+      {"serve": pc.ServeSpec(num_slots=8, page_size=64, max_context=4096,
+                             tp=16)})),
+    ("GALV081",                        # 14B bf16 weights alone blow 16 GB
+     (_mk(T1, (16, 16), ("data", "model")),
+      {"serve": pc.ServeSpec(num_slots=8, page_size=64, max_context=4096,
+                             tp=1)}),
+     (_mk(T1, (16, 16), ("data", "model")),
+      {"serve": pc.ServeSpec(num_slots=8, page_size=64, max_context=4096,
+                             tp=16)})),
+    ("GALV082",                        # 3 real pages for 8 decode slots
+     (_mk(T1, (16, 16), ("data", "model")),
+      {"serve": pc.ServeSpec(num_slots=8, page_size=64, max_context=4096,
+                             num_pages=4, tp=16)}),
+     (_mk(T1, (16, 16), ("data", "model")),
+      {"serve": pc.ServeSpec(num_slots=8, page_size=64, max_context=4096,
+                             tp=16)})),
 ]
 
 

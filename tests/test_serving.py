@@ -1,0 +1,229 @@
+"""Serving stack tests: paged-cache accounting properties, continuous-batching
+scheduler vs the per-request oracle, the paged/reference greedy twins, frozen
+ServeConfig validation, and deterministic eviction replay."""
+import numpy as np
+import pytest
+
+from tests._prop import given, settings, st
+
+from repro import serving
+from repro.runtime.kv_cache import (CacheOOM, PagedCacheConfig, PagedKVCache)
+from repro.runtime.scheduler import ContinuousBatchingScheduler
+
+ARCH = "qwen2.5-3b"
+PROMPT_LEN = 4
+PAGE = 4
+MAX_CONTEXT = 16
+SLOTS = 2
+
+
+@pytest.fixture(scope="module")
+def session():
+    config = serving.ServeConfig(
+        arch=ARCH, reduced=True,
+        cache=serving.CacheConfig(max_context=MAX_CONTEXT, page_size=PAGE),
+        scheduler=serving.SchedulerConfig(num_slots=SLOTS,
+                                          prefill_chunk=PROMPT_LEN))
+    return serving.build(config)
+
+
+def _prompts(n, session, seed=0):
+    vocab = session.config.model_config().vocab_size
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, vocab, (n, PROMPT_LEN), dtype=np.int32)
+
+
+def _oracle(session, prompt, max_new):
+    engine = serving.step_engine(session.model,
+                                 session.config.resolved_plan(),
+                                 batch=1, max_len=MAX_CONTEXT)
+    out = engine.greedy_generate_reference(session.params, prompt[None],
+                                           max_new, MAX_CONTEXT)
+    return np.asarray(out)[0].tolist()
+
+
+# ------------------------------------------------------- cache accounting
+
+def _tiny_cache_cfg(num_pages=None):
+    cfg = PagedCacheConfig(num_slots=4, page_size=4,
+                           num_pages=num_pages or 9, max_context=16,
+                           layers=1, kv_heads=1, head_dim=4)
+    return cfg
+
+
+@given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+@settings(max_examples=8, deadline=None)
+def test_page_accounting_random_schedule(seed):
+    """Random admit/grow/advance/free schedules never leak or double-book a
+    page — ``check_invariants`` holds after every step, and after freeing
+    everything the whole pool (minus the null page) is back on the free
+    list."""
+    rng = np.random.default_rng(seed)
+    cache = PagedKVCache(_tiny_cache_cfg())
+    active: dict[int, int] = {}                     # slot -> kv_len
+    for _ in range(60):
+        op = rng.choice(("alloc", "grow", "free"))
+        try:
+            if op == "alloc":
+                n = int(rng.integers(0, cache.config.slot_capacity + 1))
+                slot = cache.alloc_slot(n)
+                cache.advance(slot, min(n, cache.capacity(slot)))
+                active[slot] = min(n, cache.capacity(slot))
+            elif op == "grow" and active:
+                slot = int(rng.choice(list(active)))
+                want = int(rng.integers(active[slot],
+                                        cache.config.slot_capacity + 1))
+                cache.ensure_capacity(slot, want)
+                cache.advance(slot, want - active[slot])
+                active[slot] = want
+            elif op == "free" and active:
+                slot = int(rng.choice(list(active)))
+                cache.free_slot(slot)
+                del active[slot]
+        except CacheOOM:
+            pass                                    # all-or-nothing by contract
+        cache.check_invariants()
+    for slot in list(active):
+        cache.free_slot(slot)
+    cache.check_invariants()
+    assert cache.free_pages == cache.config.num_pages - 1
+    assert cache.free_slots == cache.config.num_slots
+
+
+def test_double_free_raises():
+    cache = PagedKVCache(_tiny_cache_cfg())
+    slot = cache.alloc_slot(4)
+    cache.free_slot(slot)
+    with pytest.raises(KeyError):
+        cache.free_slot(slot)
+    cache.check_invariants()
+
+
+# ------------------------------------------------- scheduler vs the oracle
+
+def test_scheduler_matches_per_request_oracle(session):
+    """N requests through the continuous scheduler decode token-for-token
+    identically to N independent reference runs."""
+    n = 5
+    prompts = _prompts(n, session, seed=3)
+    max_new = [2, 8, 3, 6, 4]
+    reqs = [serving.Request(prompt=prompts[i], max_new=max_new[i])
+            for i in range(n)]
+    for r in reqs:
+        session.submit(r)
+    session.run_until_drained()
+    for i, r in enumerate(reqs):
+        assert list(r.tokens) == _oracle(session, prompts[i], max_new[i]), \
+            f"request {i} diverged from the oracle"
+
+
+def test_no_starvation_fifo_admission(session):
+    """More requests than slots: every request finishes with exactly its
+    ``max_new`` tokens, and first tokens land in submission order (strict
+    FIFO admission)."""
+    n = 6
+    prompts = _prompts(n, session, seed=5)
+    reqs = [serving.Request(prompt=prompts[i], max_new=3) for i in range(n)]
+    for r in reqs:
+        session.submit(r)
+    session.run_until_drained()
+    assert all(r.done for r in reqs)
+    assert [len(r.tokens) for r in reqs] == [3] * n
+    firsts = [r.t_first for r in reqs]
+    assert firsts == sorted(firsts), "a later submission got service first"
+
+
+def test_scheduler_pages_never_leak_across_ticks(session):
+    """Cache invariants hold after every tick — including admissions into
+    freed slots and evictions under an oversubscribed pool — and the pool
+    drains back to full."""
+    cache_cfg = PagedCacheConfig.for_model(
+        session.config.model_config(), num_slots=SLOTS, page_size=PAGE,
+        max_context=MAX_CONTEXT, num_pages=5)      # 4 real pages, 8 wanted
+    sched = ContinuousBatchingScheduler(session.model, session.params,
+                                        cache_cfg, prefill_chunk=PROMPT_LEN)
+    prompts = _prompts(4, session, seed=8)
+    reqs = [serving.Request(prompt=prompts[i], max_new=10) for i in range(4)]
+    for r in reqs:
+        sched.submit(r)
+    for _ in range(10_000):
+        sched.tick()
+        sched.cache.check_invariants()
+        if all(r.done for r in reqs):
+            break
+    assert all(r.done for r in reqs)
+    assert sched.stats()["evicted"] > 0, "geometry was meant to force eviction"
+    assert sched.cache.free_pages == cache_cfg.num_pages - 1
+    assert sched.cache.free_slots == cache_cfg.num_slots
+
+
+def test_eviction_replay_is_deterministic(session):
+    """An oversubscribed pool (evictions) produces exactly the tokens of a
+    roomy pool: evicted requests replay deterministically under greedy
+    sampling."""
+    prompts = _prompts(3, session, seed=11)
+    max_new = [10, 9, 8]
+
+    def run(num_pages):
+        cache_cfg = PagedCacheConfig.for_model(
+            session.config.model_config(), num_slots=SLOTS, page_size=PAGE,
+            max_context=MAX_CONTEXT, num_pages=num_pages)
+        sched = ContinuousBatchingScheduler(session.model, session.params,
+                                            cache_cfg,
+                                            prefill_chunk=PROMPT_LEN)
+        reqs = [serving.Request(prompt=prompts[i], max_new=max_new[i])
+                for i in range(3)]
+        for r in reqs:
+            sched.submit(r)
+        sched.run_until_drained()
+        return [list(r.tokens) for r in reqs], sched.stats()["evicted"]
+
+    tight_a, evicted_a = run(5)
+    tight_b, evicted_b = run(5)
+    roomy, evicted_roomy = run(None)               # default: fully provisioned
+    assert evicted_a > 0 and evicted_a == evicted_b
+    assert evicted_roomy == 0
+    assert tight_a == tight_b == roomy
+
+
+# --------------------------------------------------------- the greedy twins
+
+def test_paged_greedy_generate_matches_reference(session):
+    """ServingEngine.greedy_generate routes through the paged scheduler on
+    CPU and must equal the dense reference loop bit-for-bit."""
+    engine = serving.step_engine(session.model,
+                                 session.config.resolved_plan(),
+                                 batch=2, max_len=MAX_CONTEXT)
+    prompts = _prompts(2, session, seed=13)
+    fast = np.asarray(engine.greedy_generate(
+        session.params, prompts, max_new=6, max_len=MAX_CONTEXT))
+    slow = np.asarray(engine.greedy_generate_reference(
+        session.params, prompts, 6, MAX_CONTEXT))
+    np.testing.assert_array_equal(fast, slow)
+
+
+# ------------------------------------------------------ ServeConfig contract
+
+def test_serve_config_rejects_indivisible_page():
+    with pytest.raises(ValueError, match="GALV080"):
+        serving.ServeConfig(
+            arch=ARCH, reduced=True,
+            cache=serving.CacheConfig(max_context=18, page_size=PAGE))
+
+
+def test_serve_config_rejects_starved_page_pool():
+    with pytest.raises(ValueError, match="GALV082"):
+        serving.ServeConfig(
+            arch=ARCH, reduced=True,
+            cache=serving.CacheConfig(max_context=MAX_CONTEXT,
+                                      page_size=PAGE, num_pages=3),
+            scheduler=serving.SchedulerConfig(num_slots=4))
+
+
+def test_serve_config_is_frozen_and_buildable(session):
+    cfg = session.config
+    with pytest.raises(Exception):
+        cfg.arch = "other"                         # frozen dataclass
+    spec = cfg.serve_spec()
+    assert spec.page_size == PAGE
+    assert cfg.check().ok
