@@ -7,10 +7,22 @@
 
 Quantifies the value of the per-layer DP — the paper's central algorithmic
 claim — on the production mesh.
+
+``--check`` (discovered by ``benchmarks/run.py --check``) is the hermetic
+CI smoke for the claim itself: on every arch the DP plan must be feasible,
+strictly beat the uniform selector, and stay within a small numerical band
+of the greedy lower bound (the DP searches a superset of uniform's space;
+greedy can eke out <1% via per-layer budgets the DP's transition costs
+price differently).
 """
 from __future__ import annotations
 
+import argparse
+
 import numpy as np
+
+#: DP must beat uniform outright and not lose to greedy beyond this factor
+GREEDY_SLACK = 0.98
 
 from repro.configs.registry import get_config
 from repro.core import cost_model as cm
@@ -86,7 +98,37 @@ def run():
     return rows
 
 
+def check(verbose: bool = True) -> list[dict]:
+    """CI smoke: per-layer DP feasible on every arch, > uniform-best, and
+    within GREEDY_SLACK of the greedy selector."""
+    rows = run()
+    assert [r["arch"] for r in rows] == ARCHS, rows
+    for r in rows:
+        assert np.isfinite(r["dp"]) and r["dp"] > 0, (
+            f"{r['arch']}: DP search infeasible on the production mesh")
+        assert r["dp_vs_uniform"] > 1.0, (
+            f"{r['arch']}: DP ({r['dp']:.3f}s) no longer beats the uniform "
+            f"selector ({r['uniform']:.3f}s) — the paper's central claim")
+        assert r["dp_vs_greedy"] >= GREEDY_SLACK, (
+            f"{r['arch']}: DP ({r['dp']:.3f}s) lost more than "
+            f"{(1 - GREEDY_SLACK) * 100:.0f}% to greedy ({r['greedy']:.3f}s)")
+    if verbose:
+        for r in rows:
+            print(f"OK: {r['arch']}: dp {r['dp']:.3f}s vs uniform "
+                  f"{r['uniform']:.3f}s ({r['dp_vs_uniform']:.2f}x) vs "
+                  f"greedy {r['greedy']:.3f}s ({r['dp_vs_greedy']:.2f}x)")
+    return rows
+
+
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--check", action="store_true",
+                    help="CI smoke: DP feasible, beats uniform, within the "
+                         "greedy band on every arch")
+    args = ap.parse_args()
+    if args.check:
+        check()
+        return
     print("arch,uniform_s,greedy_s,galvatron_dp_s,dp_speedup_vs_uniform,vs_greedy")
     for r in run():
         print(f"{r['arch']},{r['uniform']:.3f},{r['greedy']:.3f},{r['dp']:.3f},"

@@ -1,15 +1,24 @@
 """Kernel microbenchmarks: interpret-mode correctness + CPU-reference
 timings per shape (wall-clock meaning on CPU is limited; the derived column
 reports achieved GFLOP/s of the pure-jnp reference path as a sanity anchor,
-and the kernels' role is validated by the allclose sweeps in tests/)."""
+and the kernels' role is validated by the allclose sweeps in tests/).
+
+``--check`` (discovered by ``benchmarks/run.py --check``) is a hermetic CI
+smoke: every reference path must compile and produce a finite, positive
+timing — a kernel reference that stops lowering on CPU fails here, not in
+a paper-table run."""
 from __future__ import annotations
 
+import argparse
+import math
 import time
 
 import jax
 import jax.numpy as jnp
 
 from repro import compat
+
+EXPECTED = ("attention_chunked_ref_2k", "ssd_chunked_ref_2k", "rmsnorm_ref_16M")
 
 
 def _time(fn, *args, iters=5):
@@ -62,7 +71,29 @@ def run() -> list[tuple[str, float, str]]:
     return rows
 
 
+def check(verbose: bool = True) -> list[tuple[str, float, str]]:
+    """CI smoke: all three kernel reference paths compile + time finitely."""
+    rows = run()
+    names = [name for name, _, _ in rows]
+    assert names == list(EXPECTED), names
+    for name, us, derived in rows:
+        assert math.isfinite(us) and us > 0, (name, us)
+        assert derived, name
+    if verbose:
+        print("OK: " + ", ".join(
+            f"{name} {us:.0f}us" for name, us, _ in rows))
+    return rows
+
+
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--check", action="store_true",
+                    help="CI smoke: every kernel reference path compiles "
+                         "and times finitely")
+    args = ap.parse_args()
+    if args.check:
+        check()
+        return
     for name, us, derived in run():
         print(f"{name},{us:.1f},{derived}")
 

@@ -11,6 +11,13 @@ Two passes, two audiences:
   hypothesis shim, explicit ParamDef scales) — ``scripts/lint_invariants.py``
   is its CLI and a blocking CI step.
 
+A third pass sits between them: the compiled-artifact auditor
+(:mod:`repro.analysis.hlo_audit` orchestrating :mod:`.hlo_stats` — the
+post-SPMD HLO collective parser — and :mod:`.jaxpr_audit`) proves the
+*compiled* step matches the plan (collectives, dtypes, remat, no host
+callbacks) with zero steps executed, emitting GALV09x diagnostics from the
+same catalog.
+
 This ``__init__`` stays import-light on purpose: the linter must run in a
 bare-stdlib environment (the CI lint job installs no numpy/jax), so nothing
 here may import the heavier verifier eagerly.
@@ -19,7 +26,8 @@ from __future__ import annotations
 
 
 def __getattr__(name):
-    if name in ("plan_check", "lint_repo", "invariants"):
+    if name in ("plan_check", "lint_repo", "invariants", "hlo_stats",
+                "hlo_audit", "jaxpr_audit"):
         import importlib
 
         return importlib.import_module(f"{__name__}.{name}")

@@ -1,0 +1,248 @@
+"""Compiled-artifact auditor — prove the compiled step matches the plan.
+
+The search ranks plans by what the cost/memory model says the program will
+do; nothing before this module checked that XLA's partitioner *emitted* that
+program.  ``audit_step`` closes the loop statically — zero steps executed:
+
+* the post-SPMD HLO text (``compiled.as_text()``) is parsed into a
+  trip-count-corrected per-mesh-axis collective census
+  (:func:`repro.analysis.hlo_stats.axis_census`) and compared against the
+  cost model's machine-comparable prediction
+  (:func:`repro.core.cost_model.predicted_comm_census`) — **GALV090**:
+  deviations beyond a tolerance band are warnings; all-gather traffic on an
+  axis where the plan predicts none is a silent GSPMD reshard and always an
+  error;
+* the staged jaxpr is audited by :mod:`repro.analysis.jaxpr_audit` —
+  **GALV091** (f32 matmuls in a bf16 plan), **GALV092** (remat declared but
+  no checkpointed matmul), **GALV093** (host callbacks in the step);
+* infeed/outfeed/host-callback custom-calls in the HLO also raise
+  **GALV093**; a while loop whose trip count cannot be recovered makes the
+  byte census unverifiable and raises **GALV094** (the byte-band checks are
+  then skipped rather than reported against an undercounted census).
+
+Tolerances: CPU-scale test models carry fixed GSPMD overheads the cost model
+deliberately does not price (scalar loss/grad-norm reductions, rotary-table
+gathers, layout reshards), so the band is wide (``ratio``) and small-traffic
+axes are ignored below a floor that scales with the predicted volume.  The
+planted-defect corpus in ``benchmarks/hlo_audit.py`` pins both directions:
+every defect flagged code-for-code, the real searched plan clean.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+from repro.analysis import hlo_stats
+from repro.analysis.jaxpr_audit import audit_jaxpr
+from repro.analysis.plan_check import ERROR, WARNING, Diagnostic
+from repro.core.cost_model import CommCensusEntry, predicted_comm_census
+from repro.core.profiler_model import profile_model
+
+
+@dataclasses.dataclass(frozen=True)
+class AuditTolerance:
+    """Band for the GALV090 predicted-vs-measured comparison.
+
+    ``ratio`` bounds measured/predicted per axis label in both directions;
+    an axis is only judged when either side exceeds the floor, which is
+    ``max(floor_bytes, floor_frac × total predicted bytes)`` so tiny test
+    models and production models get proportionate slack.  ``gather_floor``
+    (same two-part form) is the threshold above which all-gather bytes on a
+    no-gather-predicted axis count as silent resharding."""
+
+    ratio: float = 8.0
+    floor_bytes: float = 512.0 * 1024
+    floor_frac: float = 0.10
+    gather_floor_bytes: float = 256.0 * 1024
+    gather_floor_frac: float = 0.05
+
+    def floor(self, total_predicted: float) -> float:
+        return max(self.floor_bytes, self.floor_frac * total_predicted)
+
+    def gather_floor(self, total_predicted: float) -> float:
+        return max(self.gather_floor_bytes,
+                   self.gather_floor_frac * total_predicted)
+
+
+#: custom-call targets that re-enter the host runtime (jax callbacks)
+_HOST_CALL_RE = re.compile(
+    r'custom-call[^\n]*custom_call_target="[^"]*(callback|host)[^"]*"')
+_INFEED_RE = re.compile(r"=\s+[^=\n]*\s(infeed|outfeed)(?:-(?:start|done))?\(")
+
+
+@dataclasses.dataclass
+class AuditReport:
+    """Outcome of one compiled-step audit: diagnostics plus both censuses."""
+
+    diagnostics: list
+    predicted: list = dataclasses.field(default_factory=list)
+    measured: hlo_stats.AxisCensus | None = None
+
+    @property
+    def errors(self) -> list:
+        return [d for d in self.diagnostics if d.severity == ERROR]
+
+    @property
+    def warnings(self) -> list:
+        return [d for d in self.diagnostics if d.severity == WARNING]
+
+    def ok(self) -> bool:
+        return not self.errors
+
+    def codes(self) -> list:
+        return [d.code for d in self.diagnostics]
+
+    def error_codes(self) -> list:
+        return [d.code for d in self.errors]
+
+    def census_rows(self) -> list:
+        """(axis_label, predicted_bytes, measured_bytes) per axis label."""
+        pred: dict = {}
+        for e in self.predicted:
+            pred[e.axis] = pred.get(e.axis, 0.0) + e.bytes
+        meas: dict = {}
+        if self.measured is not None:
+            for (ax, _k), (b, _c) in self.measured.entries.items():
+                meas[ax] = meas.get(ax, 0.0) + b
+        return [(ax, pred.get(ax, 0.0), meas.get(ax, 0.0))
+                for ax in sorted(set(pred) | set(meas))]
+
+    def to_event(self) -> dict:
+        """JSON-serializable summary for the run sink's ``audit`` event."""
+        return {
+            "ok": self.ok(),
+            "codes": self.codes(),
+            "error_codes": self.error_codes(),
+            "predicted_bytes": float(sum(e.bytes for e in self.predicted)),
+            "measured_bytes": (float(self.measured.total_bytes)
+                               if self.measured is not None else None),
+            "unresolved_loops": (self.measured.unresolved_loops
+                                 if self.measured is not None else None),
+            "axes": [{"axis": ax, "predicted": p, "measured": m}
+                     for ax, p, m in self.census_rows()],
+        }
+
+    def format_table(self) -> str:
+        lines = []
+        rows = self.census_rows()
+        if rows:
+            lines.append(f"{'AXIS':14s} {'PREDICTED':>12s} {'MEASURED':>12s}")
+            for ax, p, m in rows:
+                lines.append(f"{ax:14s} {p:12,.0f} {m:12,.0f}")
+        for d in self.diagnostics:
+            lines.append(str(d))
+        status = "FAIL" if self.errors else "OK"
+        lines.append(f"compiled-artifact audit: {status} "
+                     f"({len(self.errors)} error(s), "
+                     f"{len(self.warnings)} warning(s))")
+        return "\n".join(lines)
+
+
+def _audit_census(measured: hlo_stats.AxisCensus,
+                  predicted: list[CommCensusEntry],
+                  tol: AuditTolerance) -> list[Diagnostic]:
+    """GALV090: per-axis-label byte comparison, gather rule first."""
+    pred_total: dict = {}
+    pred_gather: dict = {}
+    for e in predicted:
+        pred_total[e.axis] = pred_total.get(e.axis, 0.0) + e.bytes
+        if e.kind == "all-gather":
+            pred_gather[e.axis] = pred_gather.get(e.axis, 0.0) + e.bytes
+    total_p = sum(pred_total.values())
+    floor = tol.floor(total_p)
+    g_floor = tol.gather_floor(total_p)
+
+    meas_total: dict = {}
+    for (ax, _k), (b, _c) in measured.entries.items():
+        if ax == "none":
+            continue
+        meas_total[ax] = meas_total.get(ax, 0.0) + b
+
+    diags: list[Diagnostic] = []
+    for ax in sorted(set(pred_total) | set(meas_total)):
+        p = pred_total.get(ax, 0.0)
+        m = meas_total.get(ax, 0.0)
+        m_gather = measured.bytes_on(ax, "all-gather")
+        if pred_gather.get(ax, 0.0) == 0.0 and m_gather > g_floor:
+            diags.append(Diagnostic(
+                "GALV090",
+                f"{m_gather:,.0f} B of all-gather traffic on axis '{ax}' "
+                "where the plan predicts none — a silent GSPMD reshard "
+                "(mis-sharded operand or constraint the partitioner had to "
+                "repair with a gather)",
+                where=f"hlo:{ax}"))
+            continue
+        if max(p, m) < floor:
+            continue
+        if p == 0.0:
+            diags.append(Diagnostic(
+                "GALV090",
+                f"{m:,.0f} B of collective traffic on axis '{ax}' where the "
+                "plan predicts none",
+                where=f"hlo:{ax}", severity=WARNING))
+        elif m > p * tol.ratio or m < p / tol.ratio:
+            diags.append(Diagnostic(
+                "GALV090",
+                f"axis '{ax}' collective volume {m:,.0f} B is outside the "
+                f"±{tol.ratio:g}× band around the predicted {p:,.0f} B",
+                where=f"hlo:{ax}", severity=WARNING))
+    return diags
+
+
+def _audit_hlo_callbacks(hlo_text: str) -> list[Diagnostic]:
+    diags = []
+    hosts = _HOST_CALL_RE.findall(hlo_text)
+    feeds = {m.group(1) for m in _INFEED_RE.finditer(hlo_text)}
+    if hosts or feeds:
+        parts = []
+        if feeds:
+            parts.append("/".join(sorted(feeds)))
+        if hosts:
+            parts.append(f"{len(hosts)} host custom-call(s)")
+        diags.append(Diagnostic(
+            "GALV093",
+            "host re-entry compiled into the step: " + ", ".join(parts),
+            where="hlo"))
+    return diags
+
+
+def audit_step(plan, cfg, *, seq_len: int, global_batch: int,
+               hlo_text: str | None = None, jaxpr=None,
+               dtype: str = "bf16",
+               tolerance: AuditTolerance | None = None) -> AuditReport:
+    """Audit one compiled/staged train step against its plan.
+
+    ``hlo_text`` is ``compiled.as_text()`` (post-SPMD; enables
+    GALV090/093/094); ``jaxpr`` is the staged step (enables
+    GALV091/092/093).  Either may be omitted — the corresponding checks are
+    skipped, so call sites can audit whatever artifact they hold."""
+    tol = tolerance or AuditTolerance()
+    diags: list[Diagnostic] = []
+    predicted: list[CommCensusEntry] = []
+    measured = None
+
+    if jaxpr is not None:
+        diags.extend(audit_jaxpr(jaxpr, plan, dtype=dtype))
+
+    if hlo_text is not None:
+        profile = profile_model(cfg, seq_len)
+        micro = global_batch / max(plan.grad_accum, 1)
+        predicted = predicted_comm_census(
+            profile, list(plan.layer_strategies),
+            devices=max(plan.num_devices // max(plan.pp, 1), 1),
+            micro_batch=micro, grad_accum=plan.grad_accum,
+            pp=plan.pp, mesh_axes=plan.mesh_axes)
+        measured = hlo_stats.axis_census(
+            hlo_text, plan.mesh_shape, plan.mesh_axes)
+        diags.extend(_audit_hlo_callbacks(hlo_text))
+        if measured.unresolved_loops:
+            diags.append(Diagnostic(
+                "GALV094",
+                f"{measured.unresolved_loops} while-loop(s) with "
+                "unrecoverable trip counts — collective byte totals are "
+                "unverifiable, skipping the GALV090 band comparison",
+                where="hlo"))
+        else:
+            diags.extend(_audit_census(measured, predicted, tol))
+
+    return AuditReport(diags, predicted, measured)

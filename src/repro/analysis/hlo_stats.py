@@ -1,0 +1,395 @@
+"""Post-SPMD HLO analysis: collective byte counting with loop trip counts.
+
+``compiled.as_text()`` exposes the partitioned per-device program.  XLA's
+``cost_analysis`` counts while-loop (lax.scan) bodies ONCE — verified in
+tests — so collective volumes of scanned layer stacks would be undercounted
+by O(num_layers).  This parser splits the HLO text into computations, finds
+every collective, and multiplies by the enclosing while-loop trip count
+(``backend_config={"known_trip_count":{"n":...}}``, falling back to the loop
+condition's comparison constant).  Nested loops multiply through.
+
+Byte convention (per the roofline spec): sum of *operand* sizes per
+collective.  Operands in scheduled HLO are untyped names, so operand bytes
+are derived from the result type per collective kind:
+  all-reduce / all-to-all / collective-permute: operand == result
+  all-gather: operand = result / group_size
+  reduce-scatter: operand = result × group_size
+
+Beyond flat kind totals, :func:`axis_census` attributes every collective to
+the mesh axes it spans by decoding ``replica_groups`` (explicit
+``{{0,1},{2,3}}`` sets, iota ``[2,2]<=[4]``, and transposed-iota
+``[2,2]<=[2,2]T(1,0)`` forms) or ``source_target_pairs`` (collective-permute)
+into device-id groups, mapping each device id to mesh coordinates (row-major
+over ``mesh_shape``, the order ``compat.make_mesh`` lays devices out in), and
+labeling the collective with the axes whose coordinates vary inside a group.
+A two-stage hierarchical all-reduce shows up as one entry per stage, each on
+a single axis; a global loss reduction spans every axis (``"data+model"``).
+This is the measurement half of the compiled-artifact audit
+(:mod:`repro.analysis.hlo_audit`).
+
+This module lives in analysis/ (it is a static-analysis pass over compiled
+artifacts); ``repro.launch.hlo_stats`` re-exports it for older import sites.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+COLLECTIVE_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_TRIP_RE = re.compile(r'known_trip_count[\\"=:{]+n[\\"=:]+(\d+)')
+_CONST_RE = re.compile(r"s32\[\]\s+constant\((\d+)\)")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_SET_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+_GROUPS_FULL_SET_RE = re.compile(
+    r"replica_groups=\{(\{[0-9, ]+\}(?:\s*,\s*\{[0-9, ]+\})*)\}")
+_GROUPS_IOTA_RE = re.compile(
+    r"replica_groups=\[(\d+),(\d+)\]<=\[([0-9,]+)\](?:T\(([0-9,]+)\))?")
+_PAIRS_RE = re.compile(
+    r"source_target_pairs=\{(\{[0-9, ]+\}(?:\s*,\s*\{[0-9, ]+\})*)\}")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return max(int(m.group(2)), 1)
+    m = _GROUPS_SET_RE.search(line)
+    if m:
+        return max(len(m.group(1).split(",")), 1)
+    return 1
+
+
+def parse_replica_groups(line: str):
+    """Device-id groups of one collective instruction, or ``None`` when the
+    line carries no decodable group info.  Handles the iota form
+    (``[G,S]<=[dims]``, optionally ``T(perm)``) and the explicit-set form."""
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        n_groups, g_size = int(m.group(1)), int(m.group(2))
+        dims = [int(d) for d in m.group(3).split(",") if d]
+        ids = list(range(max(_prod(dims), 1)))
+        if m.group(4):
+            perm = [int(p) for p in m.group(4).split(",") if p]
+            ids = _transpose_flat(ids, dims, perm)
+        if len(ids) != n_groups * g_size:
+            return None
+        return [ids[i * g_size:(i + 1) * g_size] for i in range(n_groups)]
+    m = _GROUPS_FULL_SET_RE.search(line)
+    if m:
+        return [[int(x) for x in grp.split(",") if x.strip()]
+                for grp in re.findall(r"\{([0-9, ]+)\}", m.group(1))]
+    return None
+
+
+def parse_source_target_pairs(line: str):
+    """collective-permute ``source_target_pairs`` as (src, tgt) id pairs."""
+    m = _PAIRS_RE.search(line)
+    if not m:
+        return None
+    return [tuple(int(x) for x in pair.split(","))
+            for pair in re.findall(r"\{([0-9, ]+)\}", m.group(1))]
+
+
+def _prod(dims):
+    n = 1
+    for d in dims:
+        n *= d
+    return n
+
+
+def _transpose_flat(ids, dims, perm):
+    """numpy-free reshape(dims) → transpose(perm) → flatten of ``ids``."""
+    strides = [0] * len(dims)
+    acc = 1
+    for i in range(len(dims) - 1, -1, -1):
+        strides[i] = acc
+        acc *= dims[i]
+    out_dims = [dims[p] for p in perm]
+    out = []
+
+    def rec(prefix):
+        if len(prefix) == len(out_dims):
+            src = sum(prefix[perm.index(i)] * strides[i]
+                      for i in range(len(dims)))
+            out.append(ids[src])
+            return
+        for j in range(out_dims[len(prefix)]):
+            rec(prefix + [j])
+
+    rec([])
+    return out
+
+
+def _coords(device_id: int, mesh_shape) -> tuple:
+    """Row-major mesh coordinates of a flat device id."""
+    coords = []
+    for size in reversed(mesh_shape):
+        coords.append(device_id % size)
+        device_id //= size
+    return tuple(reversed(coords))
+
+
+def _varying_axes(member_groups, mesh_shape) -> set | None:
+    """Axis indices whose coordinates vary inside any group; None when an
+    id falls outside the mesh."""
+    n = _prod(mesh_shape)
+    axes: set = set()
+    for group in member_groups:
+        if any(not (0 <= d < n) for d in group):
+            return None
+        cs = [_coords(d, mesh_shape) for d in group]
+        for a in range(len(mesh_shape)):
+            if len({c[a] for c in cs}) > 1:
+                axes.add(a)
+    return axes
+
+
+def classify_axes(line: str, mesh_shape, mesh_axes) -> str:
+    """Mesh-axis label of one collective instruction line.
+
+    Returns the ``"+"``-joined (mesh-order) names of the axes the collective
+    spans, ``"none"`` for degenerate self-copies, or ``"other"`` when the
+    groups cannot be decoded or reference devices outside the mesh."""
+    if "collective-permute" in line:
+        pairs = parse_source_target_pairs(line)
+        if pairs is None:
+            return "other"
+        groups = [[s, t] for s, t in pairs if s != t]
+        if not groups:
+            return "none"
+        axes = _varying_axes(groups, mesh_shape)
+    else:
+        groups = parse_replica_groups(line)
+        if groups is None:
+            return "other"
+        axes = _varying_axes(groups, mesh_shape)
+    if axes is None:
+        return "other"
+    if not axes:
+        return "none"
+    return "+".join(mesh_axes[a] for a in sorted(axes))
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    bytes_by_kind: dict
+    counts_by_kind: dict
+    unresolved_loops: int
+
+    @property
+    def total_bytes(self) -> float:
+        return float(sum(self.bytes_by_kind.values()))
+
+    def merged(self) -> dict:
+        return {"collective_bytes": self.total_bytes,
+                **{f"{k}_bytes": v for k, v in sorted(self.bytes_by_kind.items())},
+                **{f"{k}_count": v for k, v in sorted(self.counts_by_kind.items())},
+                "unresolved_loops": self.unresolved_loops}
+
+
+@dataclasses.dataclass
+class AxisCensus:
+    """Per-(mesh-axis-label, kind) collective traffic of one compiled step.
+
+    ``entries`` maps ``(axis_label, kind) -> (bytes, count)``, trip-count
+    corrected, operand-byte convention.  Labels are single axis names
+    (``"data"``), multi-axis spans (``"data+model"``), ``"none"`` or
+    ``"other"`` (see :func:`classify_axes`)."""
+
+    entries: dict
+    unresolved_loops: int
+    mesh_axes: tuple = ()
+
+    def bytes_on(self, axis_label: str, kind: str | None = None) -> float:
+        return float(sum(b for (ax, k), (b, _) in self.entries.items()
+                         if ax == axis_label and (kind is None or k == kind)))
+
+    def bytes_touching(self, axis_name: str, kind: str | None = None) -> float:
+        """Traffic on every label that includes ``axis_name`` (multi-axis
+        spans count toward each constituent axis)."""
+        return float(sum(
+            b for (ax, k), (b, _) in self.entries.items()
+            if axis_name in ax.split("+") and (kind is None or k == kind)))
+
+    @property
+    def total_bytes(self) -> float:
+        return float(sum(b for b, _ in self.entries.values()))
+
+    def labels(self) -> list:
+        return sorted({ax for ax, _ in self.entries})
+
+    def rows(self) -> list:
+        """(axis_label, kind, bytes, count) sorted rows for rendering."""
+        return [(ax, k, b, c)
+                for (ax, k), (b, c) in sorted(self.entries.items())]
+
+
+def _split_computations(text: str) -> tuple[dict, str]:
+    """Returns ({name: [instruction lines]}, entry_name)."""
+    comps: dict = {}
+    entry = None
+    cur = None
+    for line in text.splitlines():
+        if line and not line[0].isspace():
+            m = re.match(r"^(ENTRY\s+)?%?([\w.\-]+)(?:\.clone)?\s*\(.*\)\s*->.*\{", line)
+            if m:
+                cur = m.group(2)
+                comps[cur] = []
+                if m.group(1):
+                    entry = cur
+                continue
+            if line.startswith("}"):
+                cur = None
+                continue
+        if cur is not None:
+            s = line.strip()
+            if s.startswith("%") or s.startswith("ROOT"):
+                comps[cur].append(s)
+    if entry is None:
+        entry = next((n for n in comps if "main" in n), None) or (
+            next(iter(comps)) if comps else "")
+    return comps, entry
+
+
+def _collective_bytes_of_line(line: str) -> tuple[str, float] | None:
+    for kind in COLLECTIVE_OPS:
+        m = re.search(rf"=\s+(.*?)\s{re.escape(kind)}(?:-start)?\(", line)
+        if m is None:
+            if re.search(rf"=\s+.*\s{re.escape(kind)}-done\(", line):
+                return (kind, 0.0)  # counted at -start
+            continue
+        result_bytes = _shape_bytes(m.group(1))
+        g = _group_size(line)
+        if kind == "all-gather":
+            return (kind, result_bytes / g)
+        if kind == "reduce-scatter":
+            return (kind, result_bytes * g)
+        return (kind, float(result_bytes))
+    return None
+
+
+def _collect(hlo_text: str):
+    """Core walk: yields (kind, operand_bytes, multiplier, line) for every
+    collective, with while-loop trip multipliers propagated through the call
+    graph.  Returns (items, unresolved_loop_count)."""
+    comps, entry = _split_computations(hlo_text)
+    if not comps:
+        return [], 0
+
+    # call edges: (caller, callee, multiplier)
+    edges: dict = defaultdict(list)
+    unresolved = 0
+    for name, lines in comps.items():
+        for ln in lines:
+            is_while = re.search(r"[=\s]while\(", ln) is not None
+            if is_while:
+                body = re.search(r"body=%?([\w.\-]+)", ln)
+                cond = re.search(r"condition=%?([\w.\-]+)", ln)
+                trip = None
+                tm = _TRIP_RE.search(ln)
+                if tm:
+                    trip = int(tm.group(1))
+                elif cond and cond.group(1) in comps:
+                    consts = [int(c) for l2 in comps[cond.group(1)]
+                              for c in _CONST_RE.findall(l2)]
+                    trip = max(consts) if consts else None
+                if trip is None:
+                    trip = 1
+                    unresolved += 1
+                if body:
+                    edges[name].append((body.group(1), float(trip)))
+                if cond:
+                    edges[name].append((cond.group(1), 1.0))
+            else:
+                for m in re.finditer(r"(?:calls|to_apply|then_branch|else_branch)=%?([\w.\-]+)", ln):
+                    edges[name].append((m.group(1), 1.0))
+                m = re.search(r"branch_computations=\{([^}]*)\}", ln)
+                if m:
+                    for callee in m.group(1).split(","):
+                        edges[name].append((callee.strip().lstrip("%"), 1.0))
+
+    # propagate multipliers from entry (HLO call graphs are DAGs; memoized
+    # sum over parent chains)
+    parents: dict = defaultdict(list)
+    for caller, outs in edges.items():
+        for callee, trip in outs:
+            parents[callee].append((caller, trip))
+
+    mult: dict = {}
+
+    def m_of(name: str, depth: int = 0) -> float:
+        if name == entry:
+            return 1.0
+        if name in mult:
+            return mult[name]
+        if depth > 32:
+            return 0.0
+        total = sum(m_of(p, depth + 1) * trip for p, trip in parents.get(name, []))
+        mult[name] = total
+        return total
+
+    for name in comps:
+        mult[name] = m_of(name)
+    mult[entry] = 1.0
+
+    items = []
+    for name, lines in comps.items():
+        m = mult.get(name, 0.0)
+        if m == 0.0:
+            continue
+        for ln in lines:
+            got = _collective_bytes_of_line(ln)
+            if got is not None and got[1] > 0:
+                items.append((got[0], got[1], m, ln))
+    return items, unresolved
+
+
+def collective_stats(hlo_text: str) -> CollectiveStats:
+    items, unresolved = _collect(hlo_text)
+    bytes_total: dict = defaultdict(float)
+    counts_total: dict = defaultdict(float)
+    for kind, nbytes, m, _ln in items:
+        bytes_total[kind] += nbytes * m
+        counts_total[kind] += m
+    return CollectiveStats(dict(bytes_total), dict(counts_total), unresolved)
+
+
+def axis_census(hlo_text: str, mesh_shape, mesh_axes) -> AxisCensus:
+    """Trip-corrected collective census attributed to mesh axes.
+
+    Assumes the mesh was built from the default device enumeration in
+    row-major order over ``mesh_shape`` (what ``compat.make_mesh`` does), so
+    HLO device ids map to mesh coordinates positionally."""
+    mesh_shape = tuple(int(s) for s in mesh_shape)
+    mesh_axes = tuple(mesh_axes)
+    items, unresolved = _collect(hlo_text)
+    entries: dict = defaultdict(lambda: [0.0, 0.0])
+    for kind, nbytes, m, ln in items:
+        label = classify_axes(ln, mesh_shape, mesh_axes)
+        cell = entries[(label, kind)]
+        cell[0] += nbytes * m
+        cell[1] += m
+    return AxisCensus({k: (b, c) for k, (b, c) in entries.items()},
+                      unresolved, mesh_axes)

@@ -9,8 +9,10 @@ Rules:
 * **compat-jit / compat-shard-map / compat-mesh / compat-cost-analysis** —
   every version-sensitive JAX API (``jax.jit``, ``jax.shard_map``, ``Mesh(``
   construction, ``.cost_analysis()``) must route through ``repro/compat.py``.
-  Scope: ``src/repro``, ``benchmarks/``, ``scripts/`` (tests deliberately
-  exercise raw JAX — e.g. ``tests/test_compat.py`` — and are exempt).
+  Scope: ``src/repro``, ``benchmarks/``, ``scripts/`` and ``examples/`` —
+  the quickstarts are the repo's public face and must model the supported
+  API, so they get the full rule set (tests deliberately exercise raw JAX —
+  e.g. ``tests/test_compat.py`` — and are exempt).
 * **hypothesis-shim** — ``hypothesis`` may only be imported by
   ``tests/_prop.py`` (the optional-dependency shim); everything else goes
   through the shim so the hermetic CI lane still collects.
@@ -31,6 +33,14 @@ Rules:
   ``repro/serving`` (and the class's own module): the supported serving
   surface is the validated ``ServeConfig`` + ``repro.serving.build`` facade;
   step-level access goes through ``repro.serving.step_engine``.
+* **galv-catalog** — repo-level (not per-file): every ``GALV###`` code
+  referenced by the verifier/auditor sources (``plan_check.py``,
+  ``hlo_audit.py``, ``jaxpr_audit.py``) must appear in the ``plan_check``
+  module-docstring table, in ``README.md``, and in
+  ``tests/test_plan_verifier.py`` (where each code keeps a failing/passing
+  twin).  A new diagnostic code can no longer ship undocumented or untested.
+  Skipped for trees without ``src/repro/analysis/plan_check.py`` (lint-test
+  fixtures).
 """
 from __future__ import annotations
 
@@ -38,6 +48,7 @@ import argparse
 import ast
 import dataclasses
 import pathlib
+import re
 from typing import Iterable, Optional
 
 SKIP_DIRS = {".git", "__pycache__", ".claude", "results", ".github",
@@ -46,6 +57,14 @@ SKIP_DIRS = {".git", "__pycache__", ".claude", "results", ".github",
 #: rules enforcing compat.py routing (not applied to tests/ or compat.py)
 COMPAT_RULES = ("compat-jit", "compat-shard-map", "compat-mesh",
                 "compat-cost-analysis")
+
+#: verifier/auditor sources whose GALV### references define the catalog
+GALV_SOURCE_FILES = ("src/repro/analysis/plan_check.py",
+                     "src/repro/analysis/hlo_audit.py",
+                     "src/repro/analysis/jaxpr_audit.py")
+#: surfaces every referenced code must appear on (besides the docstring)
+GALV_SURFACE_FILES = ("README.md", "tests/test_plan_verifier.py")
+_GALV_CODE_RE = re.compile(r"GALV\d{3}")
 
 #: files whose module-level numeric constants are calibration-scoped
 CALIBRATION_SCOPED_FILES = {"src/repro/core/cost_model.py",
@@ -259,6 +278,52 @@ def iter_py_files(root: pathlib.Path) -> Iterable[pathlib.Path]:
         yield path
 
 
+def lint_galv_catalog(root: pathlib.Path) -> list[LintViolation]:
+    """Repo-level galv-catalog rule: every GALV### code the verifier or the
+    compiled-artifact auditor references must be documented in the
+    ``plan_check`` module docstring, listed in ``README.md`` and exercised
+    (failing/passing twin) in ``tests/test_plan_verifier.py``.  Skipped for
+    trees without the verifier (the lint tests' tmp fixtures)."""
+    anchor = root / GALV_SOURCE_FILES[0]
+    if not anchor.is_file():
+        return []
+
+    def text_of(rel: str) -> str:
+        p = root / rel
+        try:
+            return p.read_text(encoding="utf-8") if p.is_file() else ""
+        except (OSError, UnicodeDecodeError):
+            return ""
+
+    referenced: dict[str, str] = {}       # code -> first referencing source
+    for rel in GALV_SOURCE_FILES:
+        for m in _GALV_CODE_RE.finditer(text_of(rel)):
+            referenced.setdefault(m.group(0), rel)
+
+    try:
+        docstring = ast.get_docstring(
+            ast.parse(anchor.read_text(encoding="utf-8"))) or ""
+    except (OSError, SyntaxError):
+        docstring = ""
+    surfaces = [(GALV_SOURCE_FILES[0] + " (module docstring table)",
+                 docstring)]
+    surfaces += [(rel, text_of(rel)) for rel in GALV_SURFACE_FILES]
+
+    out: list[LintViolation] = []
+    for code in sorted(referenced):
+        # the docstring table lists bare 3-digit rows ("090   comm-mismatch")
+        bare_row = re.compile(rf"^{code[4:]}\s+\S", re.MULTILINE)
+        for surface, text in surfaces:
+            if code not in text and not (
+                    "docstring" in surface and bare_row.search(text)):
+                out.append(LintViolation(
+                    surface.split(" ")[0], 0, 0, "galv-catalog",
+                    f"{code} (referenced by {referenced[code]}) is missing "
+                    f"from {surface} — every diagnostic code ships with its "
+                    "docstring-table row, README row and verifier-test twin"))
+    return out
+
+
 def lint_paths(root: pathlib.Path) -> list[LintViolation]:
     out: list[LintViolation] = []
     for path in iter_py_files(root):
@@ -269,6 +334,7 @@ def lint_paths(root: pathlib.Path) -> list[LintViolation]:
             out.append(LintViolation(rel, 0, 0, "unreadable", str(e)))
             continue
         out.extend(lint_source(source, rel))
+    out.extend(lint_galv_catalog(root))
     return out
 
 

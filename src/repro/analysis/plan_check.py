@@ -40,10 +40,30 @@ code  slug                      invariant
 082   serve-slots-pages-insufficient
                                 every decode slot can hold >= 1 page
                                 beyond the reserved null page
+090   comm-mismatch             compiled HLO's per-axis collective census
+                                within a tolerance band of the cost
+                                model's prediction; unplanned all-gathers
+                                (silent GSPMD resharding) always error
+091   dtype-drift               no f32×f32 matmuls staged in a bf16 plan
+                                (rmsnorm/softmax/logit accumulators are
+                                elementwise/bf16-operand, never counted)
+092   remat-missing             remat != none implies a checkpoint region
+                                containing a matmul in the staged jaxpr
+093   host-callback-in-step     no callbacks/infeed/outfeed compiled into
+                                the jitted step
+094   scan-undercount           every while-loop trip count recoverable,
+                                else collective bytes unverifiable
+                                (warning; band comparison skipped)
 ====  ========================  ========================================
 
+The GALV09x codes are emitted by the compiled-artifact auditor
+(``repro.analysis.hlo_audit`` / ``jaxpr_audit``) — same catalog, same
+``Diagnostic`` type, different evidence (post-SPMD HLO text and the staged
+jaxpr instead of the plan alone).
+
 New invariants MUST land with a code here plus a failing/passing test pair
-in ``tests/test_plan_verifier.py`` (ROADMAP rule).
+in ``tests/test_plan_verifier.py`` (ROADMAP rule — machine-checked by the
+``galv-catalog`` lint rule).
 """
 from __future__ import annotations
 
@@ -120,6 +140,27 @@ CATALOG: dict[str, tuple[str, str, str]] = {
     "GALV082": ("serve-slots-pages-insufficient", ERROR,
                 "grow num_pages: each decode slot needs at least one real "
                 "page (page 0 is the reserved null page)"),
+    "GALV090": ("comm-mismatch", ERROR,
+                "the compiled step's collective traffic deviates from the "
+                "cost model's per-axis census — check sharding constraints "
+                "(an unplanned all-gather is a silent GSPMD reshard) or "
+                "recalibrate the comm model"),
+    "GALV091": ("dtype-drift", ERROR,
+                "f32 matmuls staged in a bf16 plan — pass the plan's "
+                "compute dtype to forward_train; the searched memory/cost "
+                "ranking assumed half-width activations"),
+    "GALV092": ("remat-missing", ERROR,
+                "plan declares remat but the staged step checkpoints no "
+                "matmul — ensure the layer runner wraps block apply in "
+                "parallel/remat.apply_remat with the plan's policy"),
+    "GALV093": ("host-callback-in-step", ERROR,
+                "remove host callbacks/infeed from the jitted step — every "
+                "tick would synchronize with Python"),
+    "GALV094": ("scan-undercount", WARNING,
+                "a while-loop trip count could not be recovered from the "
+                "HLO, so collective byte totals are unverifiable — prefer "
+                "lax.scan with static length so XLA records "
+                "known_trip_count"),
 }
 
 

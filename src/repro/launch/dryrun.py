@@ -11,7 +11,10 @@ For each cell this driver:
      the distribution config is coherent);
   3. records ``compiled.memory_analysis()`` / ``compiled.cost_analysis()``,
      and collective bytes parsed from the partitioned HLO with while-loop
-     trip-count correction (XLA counts scan bodies once — see hlo_stats);
+     trip-count correction (XLA counts scan bodies once — see
+     repro.analysis.hlo_stats); with ``--audit``, every train cell is
+     additionally checked by the compiled-artifact auditor
+     (repro.analysis.hlo_audit, GALV090-094) and audit errors fail the cell;
   4. additionally lowers an UNROLLED ga=1 variant (never compiled) whose
      ``cost_analysis`` gives exact global FLOPs/bytes for the roofline.
 
@@ -34,8 +37,8 @@ import numpy as np
 from repro import compat
 from repro.configs.registry import ARCH_IDS, get_config
 from repro.configs.shapes import SHAPES, supports_shape
+from repro.analysis.hlo_stats import collective_stats
 from repro.core.search import SearchEngine, serving_plan
-from repro.launch.hlo_stats import collective_stats
 from repro.launch.mesh import make_mesh, make_production_mesh
 from repro.models import build_model
 from repro.runtime.data import input_specs
@@ -125,6 +128,7 @@ def run_cell(arch: str, shape_id: str, *, multi_pod: bool = False,
              pp_interleave: int = 2, cp: int = 1,
              seq_len: int | None = None,
              validate_only: bool = False,
+             audit: bool = False,
              out: dict | None = None) -> dict:
     # ``out`` (when given) is mutated in place as stages complete, so a crash
     # mid-cell leaves the caller holding the stages that did succeed
@@ -284,8 +288,30 @@ def run_cell(arch: str, shape_id: str, *, multi_pod: bool = False,
         "bytes_per_device_scanned": float(ca.get("bytes accessed", 0.0)),
         "note": "XLA counts while(scan) bodies once; see unrolled + collectives",
     }
-    stats = collective_stats(compiled.as_text())
+    hlo_text = compiled.as_text()
+    stats = collective_stats(hlo_text)
     out["collectives"] = stats.merged()
+
+    # ---------------------------------------------- compiled-artifact audit
+    if audit and spec.kind == "train":
+        import jax
+        from repro.analysis.hlo_audit import audit_step
+
+        try:
+            jaxpr = jax.make_jaxpr(hp.train_step)(*args)
+        except Exception:  # noqa: BLE001 — HLO-side checks still run
+            jaxpr = None
+        report = audit_step(plan, cfg, seq_len=spec.seq_len,
+                            global_batch=spec.global_batch,
+                            hlo_text=hlo_text, jaxpr=jaxpr)
+        print(report.format_table())
+        out["audit"] = report.to_event()
+        if not report.ok():
+            raise ValueError("compiled-artifact audit failed: "
+                             + ", ".join(report.error_codes()))
+    elif audit:
+        out["audit"] = {"skipped": "census prediction covers train steps; "
+                                   "prefill/decode cells are not audited"}
 
     # ------------------------------------------------------ unrolled lower
     if not skip_unrolled and spec.kind == "train" and plan.pp > 1:
@@ -359,6 +385,12 @@ def main():
                     help="statically verify the plan (repro.analysis."
                          "plan_check) and print the GALV diagnostic table — "
                          "nothing lowers or compiles; exit 1 on any error")
+    ap.add_argument("--audit", action="store_true",
+                    help="audit every compiled train cell against its plan "
+                         "(repro.analysis.hlo_audit — GALV090-094: per-axis "
+                         "collective census vs the cost model, dtype drift, "
+                         "remat presence, host callbacks); a cell with audit "
+                         "errors counts as a failure")
     ap.add_argument("--tag", default="", help="output filename suffix")
     args = ap.parse_args()
 
@@ -406,7 +438,8 @@ def main():
                          pp=args.pp, pp_schedule=args.pp_schedule,
                          pp_interleave=args.pp_interleave,
                          cp=args.cp, seq_len=args.seq_len,
-                         validate_only=args.validate_only, out=res)
+                         validate_only=args.validate_only, audit=args.audit,
+                         out=res)
             except Exception as e:  # noqa: BLE001
                 failures += 1
                 res["error"] = f"{type(e).__name__}: {e}"

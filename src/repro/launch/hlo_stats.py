@@ -1,196 +1,20 @@
-"""Post-SPMD HLO analysis: collective byte counting with loop trip counts.
-
-``compiled.as_text()`` exposes the partitioned per-device program.  XLA's
-``cost_analysis`` counts while-loop (lax.scan) bodies ONCE — verified in
-tests — so collective volumes of scanned layer stacks would be undercounted
-by O(num_layers).  This parser splits the HLO text into computations, finds
-every collective, and multiplies by the enclosing while-loop trip count
-(``backend_config={"known_trip_count":{"n":...}}``, falling back to the loop
-condition's comparison constant).  Nested loops multiply through.
-
-Byte convention (per the roofline spec): sum of *operand* sizes per
-collective.  Operands in scheduled HLO are untyped names, so operand bytes
-are derived from the result type per collective kind:
-  all-reduce / all-to-all / collective-permute: operand == result
-  all-gather: operand = result / group_size
-  reduce-scatter: operand = result × group_size
+"""Deprecated shim — the HLO collective parser moved to
+:mod:`repro.analysis.hlo_stats` (it is a static-analysis pass over compiled
+artifacts, now the parsing core of the compiled-artifact auditor).  This
+re-export keeps older import sites working; new code should import from
+``repro.analysis.hlo_stats`` (or go through ``repro.analysis.hlo_audit``).
 """
-from __future__ import annotations
-
-import dataclasses
-import re
-from collections import defaultdict
-
-_DTYPE_BYTES = {
-    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
-    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
-    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
-}
-
-COLLECTIVE_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
-                  "collective-permute")
-
-_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
-_TRIP_RE = re.compile(r'known_trip_count[\\"=:{]+n[\\"=:]+(\d+)')
-_CONST_RE = re.compile(r"s32\[\]\s+constant\((\d+)\)")
-_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
-_GROUPS_SET_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
-
-
-def _shape_bytes(type_str: str) -> int:
-    total = 0
-    for dtype, dims in _SHAPE_RE.findall(type_str):
-        if dtype not in _DTYPE_BYTES:
-            continue
-        n = 1
-        for d in dims.split(","):
-            if d:
-                n *= int(d)
-        total += n * _DTYPE_BYTES[dtype]
-    return total
-
-
-def _group_size(line: str) -> int:
-    m = _GROUPS_RE.search(line)
-    if m:
-        return max(int(m.group(2)), 1)
-    m = _GROUPS_SET_RE.search(line)
-    if m:
-        return max(len(m.group(1).split(",")), 1)
-    return 1
-
-
-@dataclasses.dataclass
-class CollectiveStats:
-    bytes_by_kind: dict
-    counts_by_kind: dict
-    unresolved_loops: int
-
-    @property
-    def total_bytes(self) -> float:
-        return float(sum(self.bytes_by_kind.values()))
-
-    def merged(self) -> dict:
-        return {"collective_bytes": self.total_bytes,
-                **{f"{k}_bytes": v for k, v in sorted(self.bytes_by_kind.items())},
-                **{f"{k}_count": v for k, v in sorted(self.counts_by_kind.items())},
-                "unresolved_loops": self.unresolved_loops}
-
-
-def _split_computations(text: str) -> tuple[dict, str]:
-    """Returns ({name: [instruction lines]}, entry_name)."""
-    comps: dict = {}
-    entry = None
-    cur = None
-    for line in text.splitlines():
-        if line and not line[0].isspace():
-            m = re.match(r"^(ENTRY\s+)?%?([\w.\-]+)(?:\.clone)?\s*\(.*\)\s*->.*\{", line)
-            if m:
-                cur = m.group(2)
-                comps[cur] = []
-                if m.group(1):
-                    entry = cur
-                continue
-            if line.startswith("}"):
-                cur = None
-                continue
-        if cur is not None:
-            s = line.strip()
-            if s.startswith("%") or s.startswith("ROOT"):
-                comps[cur].append(s)
-    if entry is None:
-        entry = next((n for n in comps if "main" in n), None) or (
-            next(iter(comps)) if comps else "")
-    return comps, entry
-
-
-def _collective_bytes_of_line(line: str) -> tuple[str, float] | None:
-    for kind in COLLECTIVE_OPS:
-        m = re.search(rf"=\s+(.*?)\s{re.escape(kind)}(?:-start)?\(", line)
-        if m is None:
-            if re.search(rf"=\s+.*\s{re.escape(kind)}-done\(", line):
-                return (kind, 0.0)  # counted at -start
-            continue
-        result_bytes = _shape_bytes(m.group(1))
-        g = _group_size(line)
-        if kind == "all-gather":
-            return (kind, result_bytes / g)
-        if kind == "reduce-scatter":
-            return (kind, result_bytes * g)
-        return (kind, float(result_bytes))
-    return None
-
-
-def collective_stats(hlo_text: str) -> CollectiveStats:
-    comps, entry = _split_computations(hlo_text)
-    if not comps:
-        return CollectiveStats({}, {}, 0)
-
-    # call edges: (caller, callee, multiplier)
-    edges: dict = defaultdict(list)
-    unresolved = 0
-    for name, lines in comps.items():
-        for ln in lines:
-            is_while = re.search(r"[=\s]while\(", ln) is not None
-            if is_while:
-                body = re.search(r"body=%?([\w.\-]+)", ln)
-                cond = re.search(r"condition=%?([\w.\-]+)", ln)
-                trip = None
-                tm = _TRIP_RE.search(ln)
-                if tm:
-                    trip = int(tm.group(1))
-                elif cond and cond.group(1) in comps:
-                    consts = [int(c) for l2 in comps[cond.group(1)]
-                              for c in _CONST_RE.findall(l2)]
-                    trip = max(consts) if consts else None
-                if trip is None:
-                    trip = 1
-                    unresolved += 1
-                if body:
-                    edges[name].append((body.group(1), float(trip)))
-                if cond:
-                    edges[name].append((cond.group(1), 1.0))
-            else:
-                for m in re.finditer(r"(?:calls|to_apply|then_branch|else_branch)=%?([\w.\-]+)", ln):
-                    edges[name].append((m.group(1), 1.0))
-                m = re.search(r"branch_computations=\{([^}]*)\}", ln)
-                if m:
-                    for callee in m.group(1).split(","):
-                        edges[name].append((callee.strip().lstrip("%"), 1.0))
-
-    # propagate multipliers from entry (HLO call graphs are DAGs; memoized
-    # sum over parent chains)
-    parents: dict = defaultdict(list)
-    for caller, outs in edges.items():
-        for callee, trip in outs:
-            parents[callee].append((caller, trip))
-
-    mult: dict = {}
-
-    def m_of(name: str, depth: int = 0) -> float:
-        if name == entry:
-            return 1.0
-        if name in mult:
-            return mult[name]
-        if depth > 32:
-            return 0.0
-        total = sum(m_of(p, depth + 1) * trip for p, trip in parents.get(name, []))
-        mult[name] = total
-        return total
-
-    for name in comps:
-        mult[name] = m_of(name)
-    mult[entry] = 1.0
-
-    bytes_total: dict = defaultdict(float)
-    counts_total: dict = defaultdict(float)
-    for name, lines in comps.items():
-        m = mult.get(name, 0.0)
-        if m == 0.0:
-            continue
-        for ln in lines:
-            got = _collective_bytes_of_line(ln)
-            if got is not None and got[1] > 0:
-                bytes_total[got[0]] += got[1] * m
-                counts_total[got[0]] += m
-    return CollectiveStats(dict(bytes_total), dict(counts_total), unresolved)
+from repro.analysis.hlo_stats import (  # noqa: F401
+    COLLECTIVE_OPS,
+    AxisCensus,
+    CollectiveStats,
+    _collective_bytes_of_line,
+    _group_size,
+    _shape_bytes,
+    _split_computations,
+    axis_census,
+    classify_axes,
+    collective_stats,
+    parse_replica_groups,
+    parse_source_target_pairs,
+)

@@ -134,8 +134,15 @@ def _predicted_breakdown(plan: ExecutionPlan, cfg: ModelConfig, seq_len: int,
                      + cm.cp_comm_time(lp, s, env)
                      + cm.ep_comm_time(lp, s, env))
         comm += cm.dp_comm_time(lp, s, env)
+    # machine-comparable per-axis collective census — the same object the
+    # compiled-artifact auditor (repro.analysis.hlo_audit) diffs against the
+    # measured HLO census, recorded so run reports can replay the comparison
+    census = cm.predicted_comm_census(
+        profile, strategies, devices=env.devices, micro_batch=micro,
+        grad_accum=plan.grad_accum, pp=plan.pp, mesh_axes=plan.mesh_axes)
     return {"compute_s": compute, "comm_s": comm,
-            "predicted_step_time_s": plan.predicted_step_time}
+            "predicted_step_time_s": plan.predicted_step_time,
+            "comm_census": [dataclasses.asdict(e) for e in census]}
 
 
 def _emit_plan(sink, reason: str, plan: ExecutionPlan, *,
@@ -184,6 +191,33 @@ def _aot_memory(step_fn, params, opt, batch):
         return compiled, peak
     except Exception:
         return step_fn, 0.0
+
+
+def _run_audit(compiled_fn, step_fn, plan: ExecutionPlan, cfg: ModelConfig,
+               args, sink, params, opt, batch) -> None:
+    """Post-compile gate for the search's winning plan: audit the compiled
+    step (post-SPMD HLO + staged jaxpr) against the plan before the first
+    tick, emit the ``audit`` sink event, abort on audit errors."""
+    from repro.analysis.hlo_audit import audit_step
+
+    hlo_text = None
+    if hasattr(compiled_fn, "as_text"):
+        try:
+            hlo_text = compiled_fn.as_text()
+        except Exception:  # noqa: BLE001 — jaxpr-side checks still run
+            hlo_text = None
+    try:
+        jaxpr = jax.make_jaxpr(step_fn)(params, opt, batch)
+    except Exception:  # noqa: BLE001 — HLO-side checks still run
+        jaxpr = None
+    report = audit_step(plan, cfg, seq_len=args.seq, global_batch=args.batch,
+                        hlo_text=hlo_text, jaxpr=jaxpr)
+    sink.emit("audit", **report.to_event())
+    print(report.format_table())
+    if not report.ok():
+        raise SystemExit("compiled-artifact audit failed: "
+                         + ", ".join(report.error_codes())
+                         + " — the compiled step does not match the plan")
 
 
 def _apply_resize(cfg, args, event: ElasticEvent, model, hp, plan, params, opt,
@@ -267,6 +301,13 @@ def main(argv=None):
                          "plan_check) and print the GALV diagnostic table — "
                          "no params are initialized and nothing compiles; "
                          "exit 1 on any error")
+    ap.add_argument("--audit", action="store_true",
+                    help="audit the compiled step against the plan before "
+                         "the first tick (repro.analysis.hlo_audit, "
+                         "GALV090-094: per-axis collective census vs the "
+                         "cost model, dtype drift, remat presence, host "
+                         "callbacks); writes an `audit` event to the run "
+                         "sink and aborts on audit errors")
     ap.add_argument("--digest", action="store_true",
                     help="print a deterministic state digest at the end "
                          "(params/opt sums + final loss) — lets two runs be "
@@ -493,6 +534,11 @@ def main(argv=None):
             if peak_hbm:
                 registry.gauge("peak_hbm_bytes").set(peak_hbm)
                 sink.emit("memory", step=step, peak_hbm_bytes=peak_hbm)
+            if args.audit:
+                # before the first tick (and after every resize recompile):
+                # the compiled artifact must match the plan it was ranked by
+                _run_audit(compiled_fn, step_fn, plan, cfg, args, sink,
+                           params, opt, batch)
         timer.start()
         params, opt, metrics = compiled_fn(params, opt, batch)
         rec = timer.stop(step, (params, opt, metrics))

@@ -269,7 +269,8 @@ def test_benchmark_suite_discovery_covers_all_check_modules():
     assert not broken, broken
     discovered = set(suites)
     assert {"pipeline_schedules", "context_parallel", "elastic_resize",
-            "checkpoint_async"} <= discovered
+            "checkpoint_async", "plan_verifier", "hlo_audit",
+            "kernels_micro", "ablation_dp"} <= discovered
 
     defines_check = {
         p.stem for p in bench_dir.glob("*.py")

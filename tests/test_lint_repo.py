@@ -199,3 +199,90 @@ def test_calibration_constant_scope_and_allowlist():
     assert _codes("eps = 1e-9\n", rel="src/repro/core/cost_model.py") == []
     assert _codes("def f():\n    SCALE = 2.0\n    return SCALE\n",
                   rel="src/repro/core/cost_model.py") == []
+
+
+# -------------------------------------------------------------- examples scope
+
+def test_examples_get_full_default_rules_and_are_walked():
+    """examples/ is the repo's public face: it is inside the lint walk and
+    gets the complete default rule set (compat routing included)."""
+    from repro.analysis.lint_repo import COMPAT_RULES, _rules_for, iter_py_files
+
+    rules = _rules_for(pathlib.PurePosixPath("examples/quickstart.py"))
+    assert set(COMPAT_RULES) <= rules
+    assert "serve-config" in rules and "hypothesis-shim" in rules
+    assert _codes("import jax\nf = jax.jit(g)\n",
+                  rel="examples/quickstart.py") == ["compat-jit"]
+
+    walked = {p.relative_to(REPO).as_posix() for p in iter_py_files(REPO)}
+    assert {"examples/quickstart.py", "examples/search_strategies.py",
+            "examples/serve_batched.py", "examples/train_100m.py"} <= walked
+
+
+# -------------------------------------------------------------- galv-catalog
+
+def _galv_tree(tmp_path, *, docstring_row=True, readme_row=True,
+               test_twin=True):
+    """Minimal tree for the repo-level galv-catalog rule: a plan_check.py
+    referencing GALV090 plus the three documentation surfaces."""
+    anchor = tmp_path / "src" / "repro" / "analysis"
+    anchor.mkdir(parents=True)
+    doc = ('"""Verifier.\n\ncode  meaning\n090   comm-mismatch\n"""\n'
+           if docstring_row else '"""Verifier."""\n')
+    (anchor / "plan_check.py").write_text(doc + 'CODE = "GALV090"\n')
+    (tmp_path / "README.md").write_text(
+        "| GALV090 | comm-mismatch |\n" if readme_row else "nothing here\n")
+    tests = tmp_path / "tests"
+    tests.mkdir()
+    (tests / "test_plan_verifier.py").write_text(
+        'def test_galv090_pair():\n    assert "GALV090"\n'
+        if test_twin else "pass\n")
+    return tmp_path
+
+
+def test_galv_catalog_clean_on_complete_fixture(tmp_path):
+    from repro.analysis.lint_repo import lint_galv_catalog
+
+    root = _galv_tree(tmp_path)
+    assert lint_galv_catalog(root) == []
+    # and through the full walk (integration with lint_paths)
+    assert [v for v in lint_paths(root) if v.rule == "galv-catalog"] == []
+
+
+def test_galv_catalog_flags_each_missing_surface(tmp_path):
+    from repro.analysis.lint_repo import lint_galv_catalog
+
+    no_readme = lint_galv_catalog(_galv_tree(tmp_path / "a", readme_row=False))
+    assert [v.rule for v in no_readme] == ["galv-catalog"]
+    assert no_readme[0].path == "README.md"
+    assert "GALV090" in no_readme[0].message
+
+    no_doc = lint_galv_catalog(
+        _galv_tree(tmp_path / "b", docstring_row=False))
+    assert [v.rule for v in no_doc] == ["galv-catalog"]
+    assert "docstring" in no_doc[0].message
+
+    no_twin = lint_galv_catalog(_galv_tree(tmp_path / "c", test_twin=False))
+    assert [v.rule for v in no_twin] == ["galv-catalog"]
+    assert no_twin[0].path == "tests/test_plan_verifier.py"
+
+
+def test_galv_catalog_accepts_bare_docstring_rows_only_in_docstring(tmp_path):
+    """The docstring table lists bare 3-digit rows; a bare "090" row in
+    README or the tests does NOT satisfy those surfaces."""
+    from repro.analysis.lint_repo import lint_galv_catalog
+
+    root = _galv_tree(tmp_path, readme_row=False)
+    (root / "README.md").write_text("090   comm-mismatch\n")
+    out = lint_galv_catalog(root)
+    assert [v.path for v in out] == ["README.md"]
+
+
+def test_galv_catalog_skipped_without_verifier(tmp_path):
+    """Trees without src/repro/analysis/plan_check.py (the CLI fixture
+    trees above) never trip the repo-level rule."""
+    from repro.analysis.lint_repo import lint_galv_catalog
+
+    (tmp_path / "fine.py").write_text("x = 1\n")
+    assert lint_galv_catalog(tmp_path) == []
+    assert lint_paths(tmp_path) == []

@@ -322,3 +322,148 @@ def test_invariants_predicates():
 def test_unknown_code_rejected():
     with pytest.raises(ValueError):
         pc.Diagnostic("GALV999", "nope")
+
+
+# ------------------------------------------ compiled-artifact audit (GALV09x)
+# Failing/passing twins for the codes the compiled-artifact auditor
+# (repro.analysis.hlo_audit / jaxpr_audit) emits, over synthetic post-SPMD
+# HLO text and tiny staged jaxprs.  The full-runtime planted-defect corpus
+# (real compiled steps) lives in benchmarks/hlo_audit.py.
+
+from repro.analysis import hlo_audit as ha  # noqa: E402
+
+AUDIT_CFG = get_config("llama3.2-1b").reduced()
+AUDIT_SEQ, AUDIT_BATCH = 64, 8
+
+
+def _audit_plan(**kw):
+    kw.setdefault("zero", 0)
+    return uniform_plan(AUDIT_CFG.name, "t", (4, 1), ("data", "model"),
+                        AUDIT_CFG.num_layers, LayerStrategy(**kw))
+
+
+def _audit(plan, hlo=None, jaxpr=None):
+    return ha.audit_step(plan, AUDIT_CFG, seq_len=AUDIT_SEQ,
+                         global_batch=AUDIT_BATCH, hlo_text=hlo, jaxpr=jaxpr)
+
+
+def _hlo(*body_lines):
+    body = "\n".join(f"  {ln}" for ln in body_lines)
+    return ("HloModule jit_step\n\nENTRY %main () -> f32[8] {\n" + body
+            + "\n  ROOT %out = f32[8]{0} copy(%x)\n}\n")
+
+
+def _matched_data_ar(plan):
+    """An all-reduce line over the (4,1) data axis sized exactly to the
+    census prediction, so the twin HLO sits inside the GALV090 band."""
+    pred = _audit(plan, hlo=_hlo()).predicted
+    data_bytes = sum(e.bytes for e in pred if e.axis == "data")
+    n = max(int(data_bytes // 4), 1)
+    return (f"%ar = f32[{n}]{{0}} all-reduce(%p), "
+            "replica_groups={{0,1,2,3}}, to_apply=%add")
+
+
+def test_galv090_comm_mismatch_pair():
+    """GALV090: >256 KB of all-gather traffic on an axis where the plan
+    predicts none is a silent GSPMD reshard — always an error; the same HLO
+    without the gather (grad all-reduce matching the census) audits clean."""
+    plan = _audit_plan()
+    ar = _matched_data_ar(plan)
+    bad = _hlo(ar,
+               "%ag = f32[400000]{0} all-gather(%p2), "
+               "replica_groups={{0,1,2,3}}, dimensions={0}")
+    rep = _audit(plan, hlo=bad)
+    assert "GALV090" in rep.error_codes(), rep.format_table()
+    good = _audit(plan, hlo=_hlo(ar))
+    assert "GALV090" not in good.codes(), good.format_table()
+    assert good.ok() and not good.codes()
+
+
+def test_galv091_dtype_drift_pair():
+    import jax
+    import jax.numpy as jnp
+
+    plan = _audit_plan()
+    x32 = jax.ShapeDtypeStruct((8, 8), jnp.float32)
+    x16 = jax.ShapeDtypeStruct((8, 8), jnp.bfloat16)
+    bad = _audit(plan, jaxpr=jax.make_jaxpr(lambda x: x @ x)(x32))
+    assert "GALV091" in bad.error_codes()
+    good = _audit(plan, jaxpr=jax.make_jaxpr(lambda x: x @ x)(x16))
+    assert "GALV091" not in good.codes() and good.ok()
+
+
+def test_galv092_remat_missing_pair():
+    import jax
+    import jax.numpy as jnp
+
+    plan = _audit_plan(remat="selective")
+    x = jax.ShapeDtypeStruct((8, 8), jnp.bfloat16)
+    bad = _audit(plan, jaxpr=jax.make_jaxpr(lambda a: a @ a)(x))
+    assert "GALV092" in bad.error_codes()        # declared but not staged
+    good = _audit(plan, jaxpr=jax.make_jaxpr(
+        jax.checkpoint(lambda a: a @ a))(x))     # dot inside the remat region
+    assert "GALV092" not in good.codes() and good.ok()
+    # a remat='none' plan never demands checkpoint regions
+    none = _audit(_audit_plan(), jaxpr=jax.make_jaxpr(lambda a: a @ a)(x))
+    assert "GALV092" not in none.codes()
+
+
+def test_galv093_host_callback_pair():
+    import jax
+    import jax.numpy as jnp
+
+    plan = _audit_plan()
+    x = jax.ShapeDtypeStruct((8, 8), jnp.bfloat16)
+
+    def noisy(a):
+        jax.debug.print("step {x}", x=a.sum())
+        return a @ a
+
+    bad = _audit(plan, jaxpr=jax.make_jaxpr(noisy)(x))
+    assert "GALV093" in bad.error_codes()        # jaxpr side: debug_callback
+    hlo_bad = _audit(plan, hlo=_hlo(
+        _matched_data_ar(plan),
+        '%cc = f32[8]{0} custom-call(%x), '
+        'custom_call_target="xla_ffi_python_cpu_callback"'))
+    assert "GALV093" in hlo_bad.error_codes()    # HLO side: host custom-call
+    good = _audit(plan, jaxpr=jax.make_jaxpr(lambda a: a @ a)(x))
+    assert "GALV093" not in good.codes() and good.ok()
+
+
+def _hlo_with_while(cond_body_line):
+    return f"""
+HloModule jit_step
+
+%body (p: (s32[], f32[8])) -> (s32[], f32[8]) {{
+  %p = (s32[], f32[8]{{0}}) parameter(0)
+  %ar = f32[8]{{0}} all-reduce(%gte), replica_groups={{{{0,1,2,3}}}}, to_apply=%add
+  ROOT %t = (s32[], f32[8]{{0}}) tuple(%c, %ar)
+}}
+
+%cond (p.1: (s32[], f32[8])) -> pred[] {{
+  %p.1 = (s32[], f32[8]{{0}}) parameter(0)
+  {cond_body_line}
+  ROOT %cmp = pred[] compare(%i, %lim), direction=LT
+}}
+
+ENTRY %main () -> f32[8] {{
+  %init = (s32[], f32[8]{{0}}) tuple(%zero, %zeros)
+  %w = (s32[], f32[8]{{0}}) while(%init), condition=%cond, body=%body
+  ROOT %out = f32[8]{{0}} get-tuple-element(%w), index=1
+}}
+"""
+
+
+def test_galv094_scan_undercount_pair():
+    """GALV094: a while loop whose trip count cannot be recovered makes the
+    byte census unverifiable — warn and SKIP the GALV090 band comparison
+    (an undercounted census must not masquerade as a mismatch)."""
+    plan = _audit_plan()
+    bad = _audit(plan, hlo=_hlo_with_while(
+        "%lim = s32[] get-tuple-element(%p.1), index=0"))   # data-dependent
+    assert "GALV094" in bad.codes()
+    assert bad.ok()                                  # warning, not rejection
+    assert "GALV090" not in bad.codes()              # band comparison skipped
+    good = _audit(plan, hlo=_hlo_with_while("%lim = s32[] constant(10)"))
+    assert "GALV094" not in good.codes()
+    assert "GALV090" in good.codes()                 # band check ran instead
